@@ -1,0 +1,61 @@
+"""Pallas kernel micro-bench: wall time per call (interpret mode on CPU —
+correctness-shaped, not TPU-performance-shaped) + oracle agreement."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    rows = []
+    r = np.random.RandomState(0)
+    a = jnp.asarray(r.randn(256, 256), jnp.bfloat16)
+    b = jnp.asarray(r.randn(256, 256), jnp.bfloat16)
+    c = jnp.asarray(r.randn(256, 256), jnp.float32)
+    us = _time(lambda *x: ops.mfma_gemm(*x, block_m=128, block_n=128,
+                                        block_k=128), a, b, c)
+    err = float(jnp.max(jnp.abs(
+        ops.mfma_gemm(a, b, c, block_m=128, block_n=128, block_k=128)
+        - ref.mfma_gemm_ref(a, b, c))))
+    rows.append(("kernel/mfma_gemm_256", us, f"max_err={err:.3f}"))
+
+    q = jnp.asarray(r.randn(1, 256, 4, 64), jnp.bfloat16)
+    k = jnp.asarray(r.randn(1, 256, 2, 64), jnp.bfloat16)
+    v = jnp.asarray(r.randn(1, 256, 2, 64), jnp.bfloat16)
+    us = _time(lambda *x: ops.flash_attention(*x, block_q=128, block_kv=128),
+               q, k, v)
+    rows.append(("kernel/flash_attention_256", us, "vs ref in tests"))
+
+    x = jnp.asarray(r.randn(1, 128, 2, 16), jnp.float32)
+    dt_in = jnp.asarray(np.abs(r.randn(1, 128, 2)) * 0.3, jnp.float32)
+    A = jnp.asarray(-np.ones(2), jnp.float32)
+    Bm = jnp.asarray(r.randn(1, 128, 1, 16), jnp.float32)
+    us = _time(lambda *xs: ops.mamba2_ssd(*xs, chunk=32), x, dt_in, A, Bm, Bm)
+    rows.append(("kernel/mamba2_ssd_128", us, "chunk=32"))
+
+    xe = jnp.asarray(r.randn(4, 64, 128), jnp.bfloat16)
+    we = jnp.asarray(r.randn(4, 128, 64), jnp.bfloat16)
+    us = _time(lambda *xs: ops.moe_gmm(*xs, block_m=64, block_n=64,
+                                       block_k=128), xe, we)
+    rows.append(("kernel/moe_gmm_4x64", us, "E=4"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,31 @@
+"""Paper Table VI: --mfma-scale what-if (MI300, scale in {1, 2} + sweep)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.machine import get_machine
+from repro.core.whatif import scale_sweep, scale_table
+
+
+def main():
+    rows = []
+    m = get_machine("mi300")
+    t0 = time.perf_counter()
+    table = scale_table(m, scales=(1.0, 2.0))
+    dt = (time.perf_counter() - t0) * 1e6 / max(1, 2 * len(table))
+    for name, per_scale in table.items():
+        rows.append((f"table6/{name}", dt,
+                     f"scale1={per_scale[1.0]:g} scale2={per_scale[2.0]:g} "
+                     f"ratio={per_scale[2.0] / per_scale[1.0]:.2f}"))
+    # beyond-paper: fractional/extreme scales stay exact
+    sweep = scale_sweep(m, "fp32_16x16x16fp16", (0.25, 0.5, 1.5, 4.0))
+    for s, got in sweep.items():
+        rows.append((f"table6_sweep/fp32_16x16x16fp16/x{s:g}", dt,
+                     f"cycles={got:g} expected={round(16 * s)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

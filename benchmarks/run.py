@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table (+ framework extensions).
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  mfma_latency        Tables II-V  (MI200/MI300 latency vs Expected)
+  mfma_scale          Table VI     (--mfma-scale what-if)
+  whatif_workloads    Section V-B at framework scale (HLO -> MFMA streams)
+  scoreboard_bench    Section III occupancy/utilisation study
+  kernels_bench       Pallas kernels (interpret mode, vs oracles)
+"""
+
+import sys
+import traceback
+
+
+def main() -> int:
+    from benchmarks import (kernels_bench, mfma_latency, mfma_scale,
+                            scoreboard_bench, whatif_workloads)
+    mods = [("mfma_latency", mfma_latency), ("mfma_scale", mfma_scale),
+            ("whatif_workloads", whatif_workloads),
+            ("scoreboard_bench", scoreboard_bench),
+            ("kernels_bench", kernels_bench)]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in mods:
+        try:
+            for row in mod.main():
+                n, us, derived = row
+                print(f"{n},{us:.2f},{derived}")
+        except Exception:
+            failed += 1
+            print(f"{name},ERROR,", file=sys.stderr)
+            traceback.print_exc()
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,31 @@
+"""Scoreboard-simulator throughput study (supports paper Section III's
+occupancy discussion): MCE utilisation vs wavefront occupancy per CU, and
+simulator wall-time per simulated instruction."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.hlo_bridge import simulate_gemm_cu
+from repro.core.machine import get_machine
+
+
+def main():
+    rows = []
+    for gpu in ("mi200", "mi300"):
+        m = get_machine(gpu)
+        for n_wf in (1, 2, 4, 8, 16):
+            t0 = time.perf_counter()
+            r = simulate_gemm_cu(m, "fp32_16x16x4fp32", tiles_per_wf=32,
+                                 n_wf=n_wf)
+            dt = (time.perf_counter() - t0) * 1e6
+            rows.append((
+                f"scoreboard/{gpu}/wf{n_wf}", dt / r["total_mfma"],
+                f"util={r['mce_utilization']:.3f} "
+                f"makespan={r['makespan']} analytic={r['analytic_cycles']:g}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

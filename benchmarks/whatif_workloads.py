@@ -1,0 +1,70 @@
+"""Framework-scale what-if (the paper's Section V-B payoff): decompose the
+compiled smoke-scale train/decode steps of assigned architectures into MFMA
+streams and predict matrix-unit-bound time on MI200 / MI300 / TPU-v5e,
+under mfma_scale in {1, 2}.
+
+This is the gem5-for-PyTorch story at static-analysis speed: the same HLO
+the dry-run validates is re-costed against each machine's MFMA table.
+"""
+
+from __future__ import annotations
+
+import os
+
+# lower/compile only (never executes): analyse the faithful bf16 program,
+# not the CPU-execution f32 upcast (see repro.models.layers.mm)
+os.environ.setdefault("REPRO_CPU_F32_DOTS", "0")
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.hlo_analysis import analyze
+from repro.core.hlo_bridge import predict_dots
+from repro.core.machine import get_machine
+from repro.models import init_params
+from repro.models.model import loss_fn
+
+ARCHS = ["qwen2-7b", "mamba2-370m", "deepseek-v2-lite-16b",
+         "qwen3-moe-235b-a22b"]
+
+
+def _compiled_text(arch):
+    cfg = get_config(arch).reduced()
+    params = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 64), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((2, 64), jnp.int32)}
+    if cfg.cross_attn:
+        batch["media"] = jax.ShapeDtypeStruct(
+            (2, cfg.cross_attn.n_media_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.encoder:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (2, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+    fn = jax.jit(lambda p, b: loss_fn(cfg, p, b))
+    return fn.lower(params, batch).compile().as_text()
+
+
+def main():
+    rows = []
+    for arch in ARCHS:
+        t0 = time.perf_counter()
+        txt = _compiled_text(arch)
+        stats = analyze(txt)
+        dt = (time.perf_counter() - t0) * 1e6
+        for machine_name in ("mi200", "mi300", "tpu_v5e"):
+            for scale in (1.0, 2.0):
+                m = get_machine(machine_name, mfma_scale=scale)
+                pred = predict_dots(m, stats.dots)
+                rows.append((
+                    f"whatif/{arch}/{machine_name}/x{scale:g}", dt,
+                    f"mfma={pred.total_mfma} mce_us={pred.mce_time_s * 1e6:.1f} "
+                    f"mix={len(pred.instr_mix)}kinds"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,68 @@
+"""MCE what-if analysis at framework scale (paper Section V-B, beyond the
+microbenchmarks): sweep --mfma-scale over a REAL workload's compiled HLO
+and report the matrix-unit-bound time per machine model.
+
+Demonstrates the paper's headline use-case: "how would a 2x-faster (or
+slower) matrix core change my workload?" — answered from the same compiled
+artifact the dry-run validates, for any assigned architecture.
+
+    PYTHONPATH=src python examples/whatif_analysis.py --arch qwen2-7b
+"""
+
+import argparse
+import os
+
+# this example lowers/compiles only — analyse the faithful bf16 program
+os.environ.setdefault("REPRO_CPU_F32_DOTS", "0")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.core.hlo_analysis import analyze
+from repro.core.hlo_bridge import predict_dots
+from repro.core.machine import get_machine
+from repro.models import init_params
+from repro.models.model import loss_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b", choices=ARCHS)
+    ap.add_argument("--scales", default="0.5,1,2,4")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 64), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((2, 64), jnp.int32)}
+    if cfg.cross_attn:
+        batch["media"] = jax.ShapeDtypeStruct(
+            (2, cfg.cross_attn.n_media_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.encoder:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (2, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+
+    txt = jax.jit(lambda p, b: loss_fn(cfg, p, b)).lower(
+        params, batch).compile().as_text()
+    stats = analyze(txt)
+    print(f"{args.arch} (reduced) train step: "
+          f"{stats.flops / 1e9:.2f} GFLOP, {len(stats.dots)} dot sites")
+
+    scales = [float(s) for s in args.scales.split(",")]
+    print(f"\n{'machine':10s} " + " ".join(f"x{s:<8g}" for s in scales)
+          + "  (matrix-unit-bound us)")
+    for name in ("mi200", "mi300", "tpu_v5e"):
+        row = []
+        for s in scales:
+            pred = predict_dots(get_machine(name, mfma_scale=s), stats.dots)
+            row.append(f"{pred.mce_time_s * 1e6:<9.1f}")
+        print(f"{name:10s} " + " ".join(row))
+    print("\nNOTE (paper Section VI): on real code the end-to-end speedup "
+          "is sub-linear in mfma-scale — compiler-scheduled independent "
+          "work between MFMAs is fixed at compile time.")
+
+
+if __name__ == "__main__":
+    main()

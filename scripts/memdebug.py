@@ -1,0 +1,90 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+os.environ.setdefault("REPRO_CPU_F32_DOTS", "0")
+
+"""Dry-run memory diagnostics: list the largest tensors in the compiled
+per-device module (proxy for the buffer hogs)."""
+
+import argparse
+import re
+import sys
+from collections import Counter
+
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import cell_fn_and_specs
+from repro.parallel.api import set_mesh
+
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+          "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]+)\]")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh()
+    shape = SHAPES[args.shape]
+    with set_mesh(mesh):
+        fn, specs = cell_fn_and_specs(args.arch, shape, mesh)
+        compiled = jax.jit(fn).lower(*specs).compile()
+    try:
+        ma = compiled.memory_analysis()
+        print(f"args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+              f"out={ma.output_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+              f"alias={ma.alias_size_in_bytes/2**30:.2f}GiB")
+    except Exception as e:
+        print("memory_analysis:", e)
+
+    # largest result tensors in the HLO, with their op line (dedup by shape).
+    # Fusion-internal ops don't allocate — skip fused computations.
+    sizes = Counter()
+    example = {}
+    in_fused = False
+    for line in compiled.as_text().splitlines():
+        hdr = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$", line)
+        if hdr:
+            in_fused = "fused" in hdr.group(1) or "region" in hdr.group(1)
+            continue
+        if in_fused:
+            continue
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", line)
+        if not m:
+            continue
+        if re.search(r"=\s*\S+\s+parameter\(", line):
+            continue
+        sm = _SHAPE_RE.search(m.group(1))
+        if not sm:
+            continue
+        dt, dims = sm.group(1), sm.group(2)
+        if dt not in _BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        b = n * _BYTES[dt]
+        if b < 32 * 2**20:
+            continue
+        key = f"{dt}[{dims}]"
+        sizes[key] += b
+        if key not in example:
+            opm = re.search(r"=\s*\S+\s+([\w\-]+)\(", line)
+            example[key] = (opm.group(1) if opm else "?", line.strip()[:140])
+    print("\n-- largest repeated shapes (sum over occurrences >32MiB each) --")
+    for key, tot in sizes.most_common(args.top):
+        op, ln = example[key]
+        print(f"{tot/2**30:8.2f}GiB  {key:42s} {op:18s} {ln[:90]}")
+
+
+if __name__ == "__main__":
+    main()

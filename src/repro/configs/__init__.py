@@ -1,0 +1,66 @@
+"""Architecture registry + input-shape cells.
+
+``get_config("yi-34b")`` returns the exact published config; each arch file
+exports ``CONFIG``.  ``SHAPES`` defines the 4 assigned input shapes; the
+(arch x shape) applicability matrix (with skip reasons) lives here so the
+dry-run, roofline, and DESIGN.md all agree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ARCHS", "SHAPES", "get_config", "applicable", "ShapeSpec",
+           "all_cells"]
+
+ARCHS = [
+    "yi-34b", "mistral-nemo-12b", "internlm2-20b", "qwen2-7b",
+    "llama-3.2-vision-90b", "mamba2-370m", "whisper-base",
+    "qwen3-moe-235b-a22b", "deepseek-v2-lite-16b", "jamba-v0.1-52b",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module("repro.configs." + arch.replace("-", "_")
+                                  .replace(".", "_"))
+    return mod.CONFIG
+
+
+def applicable(arch: str, shape: str) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the documented skip reason."""
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return ("full quadratic attention: 524288-token decode is "
+                "intentionally skipped (DESIGN.md §Arch-applicability); "
+                "run for SSM/hybrid archs only")
+    return None
+
+
+def all_cells():
+    """Every runnable (arch, shape) pair plus the documented skips."""
+    run, skip = [], []
+    for a in ARCHS:
+        for s in SHAPES:
+            reason = applicable(a, s)
+            (skip if reason else run).append((a, s, reason))
+    return run, skip

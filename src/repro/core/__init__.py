@@ -1,0 +1,15 @@
+"""The paper's contribution: MCE/MFMA functional + timing models.
+
+Public surface:
+  isa            — MFMA registry + MI200/MI300 cycle tables (+ what-if scale)
+  machine        — MachineModel (paper Table I params; TPU v5e analytic model)
+  program        — instruction-stream IR
+  scoreboard     — event-driven CU/SIMD/MCE simulator (NRDY_MATRIX_CORE)
+  microbench     — Listing-1 streams + Eq. 1 extraction (Tables II-V)
+  whatif         — --mfma-scale analysis (Table VI)
+  functional     — D = C + A@B oracle semantics
+  hlo_bridge     — compiled-HLO -> MFMA streams -> predicted kernel time
+"""
+
+from repro.core import isa, machine, program, scoreboard, microbench  # noqa: F401
+from repro.core.machine import MI200, MI300, TPU_V5E, get_machine  # noqa: F401

@@ -1,0 +1,66 @@
+"""Functional semantics of MFMA instructions: D = C + A @ B, blocked.
+
+This is the jnp oracle corresponding to the functional implementation the
+paper added to ``src/arch/amdgpu/vega/insts/instructions.hh``; the Pallas
+``mfma_gemm`` kernel and its ref share this contract.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isa
+
+_DTYPES = {
+    "fp64": jnp.float64,
+    "fp32": jnp.float32,
+    "fp16": jnp.float16,
+    "bf16": jnp.bfloat16,
+    "i8": jnp.int8,
+    "i32": jnp.int32,
+    "fp8": jnp.float8_e4m3fn,
+}
+
+
+def operand_dtypes(instr_name: str):
+    i = isa.lookup(instr_name)
+    return _DTYPES[i.in_dtype], _DTYPES[i.out_dtype]
+
+
+def mfma_apply(instr_name: str, a, b, c):
+    """Execute one MFMA instruction functionally.
+
+    a: (blocks, M, K)   b: (blocks, K, N)   c: (blocks, M, N) -> d like c.
+    Accumulation happens in the output dtype (fp32/i32/fp64), matching the
+    MCE's wide accumulator.
+    """
+    i = isa.lookup(instr_name)
+    in_dt, out_dt = operand_dtypes(instr_name)
+    a = jnp.asarray(a, in_dt)
+    b = jnp.asarray(b, in_dt)
+    c = jnp.asarray(c, out_dt)
+    assert a.shape == i.a_shape, (a.shape, i.a_shape)
+    assert b.shape == i.b_shape, (b.shape, i.b_shape)
+    assert c.shape == i.d_shape, (c.shape, i.d_shape)
+    if i.out_dtype == "i32":
+        prod = jnp.einsum("bmk,bkn->bmn", a.astype(jnp.int32), b.astype(jnp.int32))
+    else:
+        prod = jnp.einsum("bmk,bkn->bmn", a.astype(out_dt), b.astype(out_dt),
+                          preferred_element_type=out_dt)
+    return c + prod
+
+
+def random_operands(instr_name: str, seed: int = 0):
+    i = isa.lookup(instr_name)
+    rng = np.random.RandomState(seed)
+    in_dt, out_dt = operand_dtypes(instr_name)
+    if i.in_dtype == "i8":
+        a = rng.randint(-4, 4, size=i.a_shape).astype(np.int8)
+        b = rng.randint(-4, 4, size=i.b_shape).astype(np.int8)
+        c = rng.randint(-8, 8, size=i.d_shape).astype(np.int32)
+    else:
+        a = rng.randn(*i.a_shape).astype(np.float32)
+        b = rng.randn(*i.b_shape).astype(np.float32)
+        c = rng.randn(*i.d_shape).astype(np.float32)
+    return jnp.asarray(a, in_dt), jnp.asarray(b, in_dt), jnp.asarray(c, out_dt)

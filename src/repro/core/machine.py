@@ -1,0 +1,100 @@
+"""Machine models: simulated-GPU parameters (paper Table I) + TPU target.
+
+``MachineModel`` carries everything the scoreboard simulator and the HLO
+bridge need: functional-unit topology, per-instruction-class latencies, the
+MFMA cycle table selector and the ``mfma_scale`` what-if knob.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import isa
+
+__all__ = ["MachineModel", "MI200", "MI300", "TPU_V5E", "get_machine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineModel:
+    name: str
+    gpu_table: Optional[str]      # key into isa cycle tables; None => analytic only
+    clock_mhz: float
+    # -- CU topology (paper Section III / Table I) --
+    cu_count: int = 60
+    simd_per_cu: int = 4
+    mce_per_simd: int = 1
+    max_wf_per_simd: int = 10
+    wavefront_size: int = 64
+    # -- issue / probe calibration (paper Section IV-C, from [35]-[37]) --
+    t_inst: int = 4               # per-instruction issue overhead, cycles
+    t_memtime: int = 40           # s_memtime scalar-counter access, cycles
+    # -- memory-system latencies, cycles (paper Table I) --
+    l1i_latency: int = 40
+    l1d_latency: int = 140
+    scalar_latency: int = 41
+    lds_latency: int = 65
+    l2_latency: int = 269
+    mem_latency: int = 483
+    valu_latency: int = 1
+    # -- the what-if knob (paper Section V-B) --
+    mfma_scale: float = 1.0
+    # -- TPU-analytic parameters (for the MXU machine) --
+    mxu_count: int = 0
+    mxu_dim: int = 128
+
+    def with_scale(self, mfma_scale: float) -> "MachineModel":
+        return dataclasses.replace(self, mfma_scale=mfma_scale)
+
+    @property
+    def mce_per_cu(self) -> int:
+        return self.simd_per_cu * self.mce_per_simd
+
+    def mfma_cycles(self, instr_name: str) -> int:
+        if self.gpu_table is None:
+            raise isa.UnsupportedInstructionError(
+                f"{self.name} has no MFMA cycle table; use the analytic MXU path")
+        return isa.mfma_cycles(self.gpu_table, instr_name,
+                               mfma_scale=self.mfma_scale)
+
+    def supports(self, instr_name: str) -> bool:
+        try:
+            self.mfma_cycles(instr_name)
+            return True
+        except isa.UnsupportedInstructionError:
+            return False
+
+    # --- analytic peaks (used by the HLO bridge / roofline) -------------
+    @property
+    def matrix_flops_per_cycle(self) -> float:
+        """Peak matrix-unit FLOPs per cycle for the whole chip."""
+        if self.mxu_count:
+            return 2.0 * self.mxu_count * self.mxu_dim * self.mxu_dim
+        # GPU: one MFMA of the densest class per MCE per `cycles`.
+        # Use fp32_16x16x16fp16 as the canonical dense-ML instruction.
+        inst = isa.lookup("fp32_16x16x16fp16")
+        cyc = self.mfma_cycles("fp32_16x16x16fp16")
+        return inst.flops * self.cu_count * self.mce_per_cu / cyc
+
+    @property
+    def peak_matrix_tflops(self) -> float:
+        return self.matrix_flops_per_cycle * self.clock_mhz * 1e6 / 1e12
+
+
+MI200 = MachineModel(name="mi200", gpu_table="mi200", clock_mhz=1801.0)
+MI300 = MachineModel(name="mi300", gpu_table="mi300", clock_mhz=1801.0)
+
+# TPU v5e: 197 bf16 TFLOP/s/chip = 2 * mxu_count * 128^2 * clock.
+# 8 MXUs @ ~750 MHz reproduces the public peak within 0.2%.
+TPU_V5E = MachineModel(
+    name="tpu_v5e", gpu_table=None, clock_mhz=750.0,
+    cu_count=1, simd_per_cu=1, mce_per_simd=8,
+    mxu_count=8, mxu_dim=128,
+)
+
+_MACHINES = {"mi200": MI200, "mi300": MI300, "tpu_v5e": TPU_V5E}
+
+
+def get_machine(name: str, *, mfma_scale: float = 1.0) -> MachineModel:
+    m = _MACHINES[name.lower()]
+    return m.with_scale(mfma_scale) if mfma_scale != 1.0 else m

@@ -1,0 +1,82 @@
+"""Listing-1 microbenchmarks and the Eq. 1 latency extraction.
+
+``build_listing1`` reconstructs the paper's inlined-assembly kernel as IR::
+
+    s_waitcnt                  # line 2: lgkmcnt(0) & vmcnt(0)
+    [s_nop padding]            # blue-highlighted instructions needed this
+    s_memtime  -> start        # line 3
+    v_mfma x N (data-dependent chain through D/C)   # lines 4-8
+    s_memtime  -> end          # line 9
+    s_waitcnt                  # line 10
+
+The MFMAs accumulate in place (``[C] "v"(d)`` in Listing 1), so each reads
+the previous one's destination: the chain serialises, the scoreboard holds
+each issue for the full MFMA latency, and
+
+    T_total = (N_MFMA - 1) * T_MFMA + T_memtime + T_inst          (paper)
+    T_MFMA  = (T_total - T_memtime - T_inst) / (N_MFMA - 1)       (Eq. 1)
+
+As in the paper, the functional output of this stream is intentionally
+wrong (no independent work / NOPs between dependent MFMAs) — it is a pure
+timing probe.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Sequence
+
+from repro.core import isa
+from repro.core.machine import MachineModel
+from repro.core.program import (Program, mfma, s_memtime, s_nop, s_waitcnt)
+from repro.core.scoreboard import WFResult, simulate_program
+
+__all__ = ["build_listing1", "t_total", "eq1_latency", "measure_latency",
+           "latency_table"]
+
+
+def build_listing1(instr_name: str, n_mfma: int, *, padding_nops: int = 0) -> Program:
+    if n_mfma < 2:
+        raise ValueError("need >= 2 MFMAs: the final one is not waited on "
+                         "(paper Section IV-C)")
+    prog: Program = [s_waitcnt()]
+    prog += [s_nop() for _ in range(padding_nops)]
+    prog.append(s_memtime("s_start", tag="start"))
+    for i in range(n_mfma):
+        # D = C + A*B with C == D: in-place accumulate => true dep chain.
+        prog.append(mfma(instr_name, d="v_d", a="v_a", b="v_b", c="v_d",
+                         tag=f"mfma{i}"))
+    prog.append(s_memtime("s_end", tag="end"))
+    prog.append(s_waitcnt())
+    return prog
+
+
+def t_total(result: WFResult) -> int:
+    """total = end - start, as accumulated on line 13 of Listing 1."""
+    return result.value("s_end") - result.value("s_start")
+
+
+def eq1_latency(total: int, n_mfma: int, machine: MachineModel) -> float:
+    """Equation 1 of the paper."""
+    return (total - machine.t_memtime - machine.t_inst) / (n_mfma - 1)
+
+
+def measure_latency(machine: MachineModel, instr_name: str, n_mfma: int,
+                    *, padding_nops: int = 0) -> float:
+    prog = build_listing1(instr_name, n_mfma, padding_nops=padding_nops)
+    res = simulate_program(machine, prog)
+    return eq1_latency(t_total(res), n_mfma, machine)
+
+
+def latency_table(machine: MachineModel,
+                  instr_names: Sequence[str] = None,
+                  n_range: Iterable[int] = (2, 3, 4, 5)) -> Dict[str, Dict[int, float]]:
+    """Reproduces paper Tables III/V (gem5 columns) for ``machine``.
+
+    Returns {instr: {N: measured_latency}}.  Deterministic, so values match
+    the 'Expected' column rather than the KVM-jittered samples.
+    """
+    if instr_names is None:
+        instr_names = isa.supported_instructions(machine.gpu_table,
+                                                 validated_only=True)
+    return {name: {n: measure_latency(machine, name, n) for n in n_range}
+            for name in instr_names}

@@ -1,0 +1,41 @@
+"""What-if analysis via ``mfma_scale`` (paper Section V-B, Table VI).
+
+Scaling the MFMA cycle table lets users explore faster/slower future MCE
+designs.  As the paper notes (Section VI), on real code the speedup is NOT
+linear because the compiler fixed the amount of independent work between
+MFMAs at compile time; the microbenchmark path below shows the linear
+(instruction-isolated) effect while :mod:`repro.core.hlo_bridge` exposes the
+workload-level (Amdahl-limited) effect.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Sequence
+
+from repro.core import isa
+from repro.core.machine import MachineModel
+from repro.core.microbench import measure_latency
+
+__all__ = ["scale_table", "scale_sweep"]
+
+
+def scale_table(machine: MachineModel, scales: Sequence[float] = (1.0, 2.0),
+                instr_names: Sequence[str] = None,
+                n_mfma: int = 2) -> Dict[str, Dict[float, float]]:
+    """Reproduces paper Table VI: measured latency per instruction x scale."""
+    if instr_names is None:
+        instr_names = isa.supported_instructions(machine.gpu_table,
+                                                 validated_only=True)
+    out: Dict[str, Dict[float, float]] = {}
+    for name in instr_names:
+        out[name] = {}
+        for s in scales:
+            m = machine.with_scale(s)
+            out[name][s] = measure_latency(m, name, n_mfma)
+    return out
+
+
+def scale_sweep(machine: MachineModel, instr_name: str,
+                scales: Iterable[float]) -> Dict[float, float]:
+    return {s: measure_latency(machine.with_scale(s), instr_name, 4)
+            for s in scales}

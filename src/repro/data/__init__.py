@@ -1,0 +1,3 @@
+"""Data pipeline: synthetic sharded LM token stream with host prefetch."""
+
+from repro.data.pipeline import SyntheticLM, prefetch_to_device  # noqa: F401

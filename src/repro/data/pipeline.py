@@ -1,0 +1,91 @@
+"""Synthetic sharded LM data pipeline.
+
+``SyntheticLM`` generates a deterministic Zipf-distributed token stream
+with local n-gram correlations (so the ~100M-param example actually has
+signal to learn: token t+1 depends on token t through a fixed permutation
+mixed with noise).  Batches are addressable by step — ``batch(step)`` is a
+pure function of (seed, step) — which makes the fault-tolerant controller's
+restart/replay exact and multi-host loading embarrassingly parallel (each
+host materialises only its batch rows).
+
+``prefetch_to_device`` overlaps host generation with device compute via a
+background thread + bounded queue, placing each batch with the target
+NamedSharding.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["SyntheticLM", "prefetch_to_device"]
+
+
+class SyntheticLM:
+    def __init__(self, vocab_size: int, batch: int, seq_len: int, *,
+                 seed: int = 0, correlation: float = 0.8):
+        self.vocab_size = vocab_size
+        self.batch = batch
+        self.seq_len = seq_len
+        self.seed = seed
+        self.correlation = correlation
+        rng = np.random.RandomState(seed)
+        self._perm = rng.permutation(vocab_size)
+        # Zipf-ish unigram distribution
+        ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+        p = 1.0 / ranks
+        self._p = p / p.sum()
+
+    def batch_np(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.RandomState((self.seed * 1_000_003 + step) % 2**31)
+        B, S = self.batch, self.seq_len
+        toks = np.empty((B, S + 1), np.int32)
+        toks[:, 0] = rng.choice(self.vocab_size, size=B, p=self._p)
+        follow = rng.random((B, S)) < self.correlation
+        fresh = rng.choice(self.vocab_size, size=(B, S), p=self._p)
+        for t in range(S):
+            nxt = self._perm[toks[:, t]]
+            toks[:, t + 1] = np.where(follow[:, t], nxt, fresh[:, t])
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __call__(self, step: int) -> Dict[str, np.ndarray]:
+        return self.batch_np(step)
+
+    def iterate(self, start: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+        step = start
+        while True:
+            yield self.batch_np(step)
+            step += 1
+
+
+def prefetch_to_device(it: Iterator, *, size: int = 2,
+                       sharding=None) -> Iterator:
+    """Background-thread prefetch; places batches with ``sharding``."""
+    q: "queue.Queue" = queue.Queue(maxsize=size)
+    _END = object()
+
+    def put(batch):
+        if sharding is not None:
+            batch = jax.tree.map(lambda x: jax.device_put(x, sharding), batch)
+        else:
+            batch = jax.tree.map(jax.device_put, batch)
+        q.put(batch)
+
+    def worker():
+        try:
+            for b in it:
+                put(b)
+        finally:
+            q.put(_END)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        b = q.get()
+        if b is _END:
+            return
+        yield b

@@ -1,0 +1,104 @@
+"""Flash-decode Pallas kernel: one query token vs a long KV cache.
+
+Grid (B*KV, T/block_kv): the KV sequence is the sequential dimension; the
+G query heads of each KV group ride along inside the tile ((G, hd) query
+block), so the kernel's inner product is an MXU-friendly (G, hd) x
+(hd, block_kv) matmul even for G as small as 4-8.  Running (m, l, acc)
+scratch identical to the prefill kernel; ``kv_len`` masks unwritten cache
+slots.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention"]
+
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, n_kv: int, block_kv: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0]
+
+    @pl.when(ki * block_kv < kv_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # (G, hd)
+        k = k_ref[0].astype(jnp.float32)                    # (bkv, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, bkv)
+        col = ki * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(col < kv_len, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ()))
+        ).astype(jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, *, block_kv: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k/v: (B, T, KV, hd); kv_len: scalar int32.
+
+    Returns (B, H, hd) attention output over cache positions < kv_len.
+    """
+    B, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    block_kv = min(block_kv, T)
+    assert T % block_kv == 0
+
+    qf = q.reshape(B, KV, G, hd).reshape(B * KV, G, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32)[None], (1,))
+
+    grid = (B * KV, T // block_kv)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, n_kv=T // block_kv,
+                          block_kv=block_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lens, qf, kf, vf)
+    return out.reshape(B, KV, G, hd).reshape(B, H, hd)

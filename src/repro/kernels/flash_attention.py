@@ -1,0 +1,121 @@
+"""Blockwise online-softmax (flash) attention Pallas kernel, causal GQA.
+
+VMEM tiling: q tile (block_q, hd), K/V tiles (block_kv, hd), running
+(m, l, acc) in f32 VMEM scratch.  Grid (B*KV*G, Sq/block_q, T/block_kv)
+with the KV dimension innermost/sequential; fully-masked causal blocks are
+skipped with ``pl.when`` (the XLA reference in models/attention.py executes
+them — one of the kernel's perf wins on real TPUs).
+
+The contract matches ``repro.kernels.ref.flash_attention_ref`` (and the
+model's `_flash_sdpa`): grouped heads, causal, optional kv_len mask.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, n_kv: int, block_q: int,
+                  block_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip blocks strictly above the diagonal
+    run = True
+    if causal:
+        run = ki * block_kv <= qi * block_q + block_q - 1
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bkv, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bkv)
+        if causal:
+            row = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            col = ki * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            s = jnp.where(col <= row, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ()))
+        ).astype(jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 512,
+                    block_kv: int = 512, interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, T, KV, hd) with H = KV*G -> (B, S, H, hd).
+
+    Requires S % block_q == 0 and T % block_kv == 0 (production shapes are
+    powers of two; the XLA path handles ragged tails).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, T)
+    assert S % block_q == 0 and T % block_kv == 0
+
+    # (B, S, KV, G, hd) -> flat (B*KV*G, S, hd) query-major layout
+    qf = q.reshape(B, S, KV, G, hd).transpose(0, 2, 3, 1, 4) \
+        .reshape(B * KV * G, S, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1) \
+        .reshape(B * KV * G, T, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1) \
+        .reshape(B * KV * G, T, hd)
+
+    grid = (B * KV * G, S // block_q, T // block_kv)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          n_kv=T // block_kv, block_q=block_q,
+                          block_kv=block_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV * G, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, hd), jnp.float32),  # accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, KV, G, S, hd).transpose(0, 3, 1, 2, 4) \
+        .reshape(B, S, H, hd)

@@ -1,0 +1,109 @@
+"""Chunked SSD (Mamba2) Pallas kernel.
+
+Grid (B, nh, S/chunk) with the chunk dimension sequential; the inter-chunk
+SSM state (hd, ds) lives in f32 VMEM scratch across chunk steps (reset at
+chunk 0).  All intra-chunk work is expressed as (Q x Q) / (Q x hd) / (Q x ds)
+matmuls — MXU-shaped, which is precisely the "state-space duality" insight:
+the quadratic-attention form of the SSM inside a chunk, the linear
+recurrence across chunks.  Cumulative sums are computed as a
+lower-triangular-ones matmul (MXU) rather than a serial scan.
+
+B/C group tensors are indexed per-head via the BlockSpec index map
+(h -> h // heads_per_group), so grouped B/C are never materialised per head.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mamba2_ssd"]
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, hout_ref,
+                state_ref, *, n_chunks: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    A = a_ref[0, 0]                                     # scalar f32
+    x = x_ref[0, :, 0, :].astype(jnp.float32)           # (Q, hd)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)            # (Q,)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)          # (Q, ds)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)          # (Q, ds)
+
+    dA = dt * A                                         # (Q,) log-decay <= 0
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = (col <= row).astype(jnp.float32)              # inclusive lower-tri
+    cum = jax.lax.dot_general(tri, dA[:, None],
+                              (((1,), (0,)), ((), ())))[:, 0]   # cumsum via MXU
+    total = cum[chunk - 1]
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # (Q, Q)
+    # mask inside the exp: anti-causal entries are positive log-decays
+    # whose exp overflows (inf * 0 = NaN)
+    L = jnp.exp(jnp.where(tri > 0, cum[:, None] - cum[None, :], -1e30))
+    W = scores * L * dt[None, :]
+    y_intra = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())))   # (Q, hd)
+
+    h_prev = state_ref[...]                              # (hd, ds)
+    y_inter = jax.lax.dot_general(Cm, h_prev,
+                                  (((1,), (1,)), ((), ())))         # (Q, hd)
+    y_inter = y_inter * jnp.exp(cum)[:, None]
+
+    decay_j = jnp.exp(total - cum) * dt                  # (Q,)
+    state_ref[...] = jnp.exp(total) * h_prev + jax.lax.dot_general(
+        x * decay_j[:, None], Bm, (((0,), (0,)), ((), ())))         # (hd, ds)
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        hout_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_ssd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+               Cm: jax.Array, *, chunk: int = 256,
+               interpret: bool = False):
+    """x (B,S,nh,hd); dt (B,S,nh) f32 post-softplus; A (nh,) f32 negative;
+    Bm/Cm (B,S,G,ds).  Returns (y (B,S,nh,hd), state (B,nh,hd,ds) f32)."""
+    B, S, nh, hd = x.shape
+    G, ds = Bm.shape[2], Bm.shape[3]
+    hpg = nh // G
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    grid = (B, nh, n_chunks)
+
+    y, state = pl.pallas_call(
+        functools.partial(_ssd_kernel, n_chunks=n_chunks, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, chunk, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, chunk, 1, ds), lambda b, h, c: (b, c, h // hpg, 0)),
+            pl.BlockSpec((1, chunk, 1, ds), lambda b, h, c: (b, c, h // hpg, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, hd, ds), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, nh, hd), x.dtype),
+            jax.ShapeDtypeStruct((B, nh, hd, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(A.reshape(nh, 1).astype(jnp.float32), x, dt, Bm, Cm)
+    return y, state

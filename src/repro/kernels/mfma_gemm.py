@@ -1,0 +1,79 @@
+"""MXU-tiled accumulate-GEMM Pallas kernel: D = C + A @ B.
+
+This is the MFMA *contract* (paper Section III) adapted to TPU per the
+hardware-adaptation requirement: AMD's 4x4-block micro-tiles target 64-lane
+SIMD wavefronts; the TPU MXU is a 128x128 systolic array, so the kernel
+tiles GEMMs into MXU-aligned VMEM blocks (multiples of 128) and carries the
+``D = C + A*B`` accumulation in an f32 VMEM scratch accumulator — the MCE's
+wide accumulator.  The timing layer (core.hlo_bridge) accounts the same
+GEMM as MFMA micro-ops on MI200/MI300 and as 128x128 systolic passes on
+the TPU machine model.
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary" = sequential), so each
+(i, j) output tile stays resident in VMEM across the K loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mfma_gemm"]
+
+
+def _gemm_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = c_ref[...].astype(acc_ref.dtype)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def mfma_gemm(a: jax.Array, b: jax.Array, c: jax.Array, *,
+              block_m: int = 256, block_n: int = 256, block_k: int = 512,
+              interpret: bool = False) -> jax.Array:
+    """a: (M, K), b: (K, N), c: (M, N) -> c + a @ b (f32 accumulation).
+
+    Block sizes must be MXU-aligned (multiples of 128) and divide the
+    operand dims; VMEM footprint = bm*bk + bk*bn (operands) + 2*bm*bn
+    (C tile + f32 accumulator), ~0.9 MiB at the defaults in bf16.
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2 and c.shape == (M, N), (a.shape, b.shape, c.shape)
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        "dims must be divisible by block sizes", (M, N, K),
+        (block_m, block_n, block_k))
+    n_k = K // block_k
+    grid = (M // block_m, N // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), c.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b, c)

@@ -1,0 +1,68 @@
+"""Grouped (per-expert) matmul Pallas kernel for capacity-based MoE.
+
+x (E, C, K) @ w (E, K, N) -> (E, C, N): one MXU-tiled GEMM per expert,
+grid (E, C/bm, N/bn, K/bk) with the expert dimension outermost-parallel
+(each expert's tiles are independent — on a real TPU the E axis is also
+the EP shard axis, so each device runs its local experts only).  Shares
+the accumulate-in-VMEM pattern with mfma_gemm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["moe_gmm"]
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def moe_gmm(x: jax.Array, w: jax.Array, *, block_m: int = 128,
+            block_n: int = 128, block_k: int = 512,
+            interpret: bool = False) -> jax.Array:
+    """x: (E, C, K), w: (E, K, N) -> (E, C, N) with f32 accumulation."""
+    E, C, K = x.shape
+    E2, K2, N = w.shape
+    assert E == E2 and K == K2
+    block_m = min(block_m, C)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    assert C % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    n_k = K // block_k
+    grid = (E, C // block_m, N // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_gmm_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_k), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, block_k, block_n), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(x, w)

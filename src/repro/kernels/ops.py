@@ -1,0 +1,57 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python per grid step, validating correctness; on a real TPU
+backend the same call sites compile to Mosaic.  ``interpret=None`` (the
+default) auto-detects.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels import (decode_attention as _da, flash_attention as _fa,
+                           mamba2_ssd as _ssd, mfma_gemm as _gemm,
+                           moe_gmm as _gmm)
+
+__all__ = ["mfma_gemm", "flash_attention", "decode_attention", "mamba2_ssd",
+           "moe_gmm"]
+
+
+def _interp(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def mfma_gemm(a, b, c, *, block_m=256, block_n=256, block_k=512,
+              interpret: Optional[bool] = None):
+    return _gemm.mfma_gemm(a, b, c, block_m=block_m, block_n=block_n,
+                           block_k=block_k, interpret=_interp(interpret))
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=512, block_kv=512,
+                    interpret: Optional[bool] = None):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_kv=block_kv,
+                               interpret=_interp(interpret))
+
+
+def decode_attention(q, k, v, kv_len, *, block_kv=512,
+                     interpret: Optional[bool] = None):
+    return _da.decode_attention(q, k, v, kv_len, block_kv=block_kv,
+                                interpret=_interp(interpret))
+
+
+def mamba2_ssd(x, dt, A, Bm, Cm, *, chunk=256,
+               interpret: Optional[bool] = None):
+    return _ssd.mamba2_ssd(x, dt, A, Bm, Cm, chunk=chunk,
+                           interpret=_interp(interpret))
+
+
+def moe_gmm(x, w, *, block_m=128, block_n=128, block_k=512,
+            interpret: Optional[bool] = None):
+    return _gmm.moe_gmm(x, w, block_m=block_m, block_n=block_n,
+                        block_k=block_k, interpret=_interp(interpret))

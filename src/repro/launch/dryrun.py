@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The dry-run lowers/compiles only (never executes), so keep faithful bf16
+# dots in the HLO instead of the CPU-execution f32 upcast (see layers.mm).
+os.environ.setdefault("REPRO_CPU_F32_DOTS", "0")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  2. builds abstract, sharding-annotated inputs (launch/specs.py),
+  3. ``jax.jit(fn).lower(...).compile()`` — sharding mismatches, OOM at
+     compile, or unsupported collectives fail HERE, which is the point,
+  4. records memory_analysis / cost_analysis / loop-aware HLO stats
+     (FLOPs, bytes, per-kind collective wire bytes) to JSON for the
+     roofline (§Roofline) and the MFMA what-if bridge.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, all_cells, applicable, get_config
+from repro.core import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import cell_fn_and_specs
+from repro.parallel.api import set_mesh
+
+__all__ = ["run_cell", "main"]
+
+
+import re as _re
+
+_CONVERT_RE = _re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*f32\[([\d,]+)\][^\s]*\s+convert\(")
+_HDR_RE = _re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+
+
+def _cpu_upcast_bytes(hlo_text: str) -> int:
+    """XLA:CPU legalises bf16 dots by hoisting whole-buffer f32 converts
+    (often outside loops).  These buffers don't exist on TPU (native bf16
+    MXU operands) — estimate their total so the roofline can report a
+    TPU-corrected temp size alongside the raw CPU number."""
+    total = 0
+    in_fused = False
+    for line in hlo_text.splitlines():
+        h = _HDR_RE.match(line)
+        if h:
+            in_fused = "fused" in h.group(1) or "region" in h.group(1)
+            continue
+        if in_fused:
+            continue
+        m = _CONVERT_RE.match(line)
+        if not m:
+            continue
+        dims = m.group(1)
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n * 4 < 64 * 2**20:
+            continue
+        if f"bf16[{dims}]" in hlo_text:   # converts a bf16 buffer of same shape
+            total += n * 4
+    return total
+
+
+def _mem_stats(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["total_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+        try:
+            upcast = _cpu_upcast_bytes(compiled.as_text())
+            out["cpu_upcast_convert_bytes"] = upcast
+            out["tpu_estimate_bytes_per_device"] = (
+                out["total_bytes_per_device"] - upcast)
+        except Exception:
+            pass
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    """Lower+compile one cell; returns the stats record."""
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "n_devices": mesh.size, "kind": shape.kind}
+    # donate the state buffers (params/opt for train, KV cache for decode):
+    # the updated state aliases the input allocation, as in production
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[shape.kind]
+    t0 = time.time()
+    with set_mesh(mesh):
+        fn, specs = cell_fn_and_specs(arch, shape, mesh, cfg=cfg)
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*specs)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    rec["lower_s"] = round(t1 - t0, 2)
+    rec["compile_s"] = round(t2 - t1, 2)
+    rec["n_params"] = int(sum(
+        x.size for x in jax.tree.leaves(specs[0])))
+
+    mem = _mem_stats(compiled)
+    rec["memory"] = mem                         # proves it fits
+    try:
+        ca = compiled.cost_analysis()
+        rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float))
+                                and k in ("flops", "bytes accessed",
+                                          "transcendentals", "utilization")}
+    except Exception:
+        rec["cost_analysis"] = {}
+
+    # loop-aware stats from the compiled (post-SPMD, per-device) module
+    try:
+        stats = hlo_analysis.analyze(compiled.as_text())
+        top_ops = dict(sorted(stats.bytes_by_opcode.items(),
+                              key=lambda kv: -kv[1])[:10])
+        rec["hlo"] = {
+            "flops_per_device": stats.flops,
+            "bytes_per_device": stats.bytes_accessed,
+            "collectives": stats.collectives,
+            "collective_wire_bytes": stats.collective_wire_bytes,
+            "bytes_by_opcode": top_ops,
+            "flash_block_bytes": stats.flash_block_bytes,
+        }
+    except Exception as e:  # keep the cell green; roofline can re-derive
+        rec["hlo"] = {"error": f"{type(e).__name__}: {e}"}
+
+    if verbose:
+        mb = mem.get("total_bytes_per_device", 0) / 2**30
+        tb = mem.get("tpu_estimate_bytes_per_device", 0) / 2**30
+        fl = rec.get("hlo", {}).get("flops_per_device", 0)
+        print(f"[dryrun] {arch:24s} {shape_name:12s} {rec['mesh']:8s} "
+              f"compile={rec['compile_s']:7.1f}s mem/dev={mb:6.2f}GiB "
+              f"(tpu-est {tb:6.2f}) flops/dev={fl:.3e}", flush=True)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every runnable (arch x shape) cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if args.all:
+        cells, skips = all_cells()
+        todo = [(a, s) for a, s, _ in cells]
+        for a, s, reason in skips:
+            print(f"[dryrun] SKIP {a} {s}: {reason}")
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        reason = applicable(args.arch, args.shape)
+        if reason:
+            print(f"[dryrun] SKIP {args.arch} {args.shape}: {reason}")
+            return 0
+        todo = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in todo:
+        for mp in meshes:
+            tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+            path = out_dir / f"{tag}.json"
+            try:
+                rec = run_cell(arch, shape, mp)
+                path.write_text(json.dumps(rec, indent=1))
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"[dryrun] FAIL {tag}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for t, e in failures:
+            print("  ", t, e)
+        return 1
+    print(f"[dryrun] all {len(todo) * len(meshes)} cells compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

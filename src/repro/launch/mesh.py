@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION (never a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, and smoke tests/benches must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_smoke_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16)=256 chips/pod ("data","model"); multi-pod adds a leading
+    2-way "pod" axis (the slower DCN/ICI-optical dimension) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
+    """Degenerate mesh for single-device tests (exercises the sharding
+    code paths without requiring fake devices)."""
+    return jax.make_mesh(shape, axes)

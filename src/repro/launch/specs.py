@@ -1,0 +1,116 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+Everything here is abstract: ``jax.eval_shape`` over the init functions,
+with NamedShardings attached — weak-type-correct, shardable, zero device
+allocation.  The same specs drive the dry-run, the roofline, and the perf
+hillclimb, so the three always measure the same program.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs import ShapeSpec, get_config
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import DTYPES
+from repro.parallel.api import logical_to_spec
+from repro.train.optim import OptConfig, init_opt_state
+from repro.train.step import make_train_step
+
+__all__ = ["sharded_abstract", "batch_specs", "cell_fn_and_specs",
+           "abstract_params", "abstract_opt_state", "abstract_cache"]
+
+
+def sharded_abstract(tree, rule: Callable, mesh: Optional[Mesh]):
+    """Attach NamedShardings (via a (path, leaf)->logical-axes rule) to an
+    abstract pytree."""
+    def f(path, leaf):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
+        spec = logical_to_spec(leaf.shape, rule(path, leaf), mesh)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def abstract_params(cfg: ModelConfig, mesh: Optional[Mesh]):
+    shapes = jax.eval_shape(
+        functools.partial(model_lib.init_params, cfg), jax.random.PRNGKey(0))
+    return sharded_abstract(shapes, model_lib.param_axes_rule, mesh)
+
+
+def abstract_opt_state(cfg: ModelConfig, params_abstract, mesh: Optional[Mesh]):
+    shapes = jax.eval_shape(init_opt_state, params_abstract)
+    return sharded_abstract(shapes, model_lib.param_axes_rule, mesh)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   mesh: Optional[Mesh]):
+    shapes = jax.eval_shape(
+        functools.partial(model_lib.init_cache, cfg, batch, max_len))
+    return sharded_abstract(shapes, model_lib.cache_axes_rule, mesh)
+
+
+def _batch_rule(path, leaf):
+    nd = len(leaf.shape)
+    return ("batch",) + (None,) * (nd - 1)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Optional[Mesh],
+                *, with_labels: bool) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    dt = DTYPES[cfg.dtype]
+    b = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if with_labels:
+        b["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.cross_attn:
+        b["media"] = jax.ShapeDtypeStruct(
+            (B, cfg.cross_attn.n_media_tokens, cfg.d_model), dt)
+    if cfg.encoder:
+        b["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.n_frames, cfg.d_model), dt)
+    return sharded_abstract(b, _batch_rule, mesh)
+
+
+def cell_fn_and_specs(arch: str, shape: ShapeSpec, mesh: Optional[Mesh],
+                      cfg: Optional[ModelConfig] = None,
+                      opt_cfg: Optional[OptConfig] = None
+                      ) -> Tuple[Callable, Tuple]:
+    """The function this cell lowers + its abstract, sharded arguments.
+
+    train  -> train_step(params, opt_state, batch)
+    prefill-> prefill(params, batch)           (last-token logits + cache)
+    decode -> decode_step(params, cache, tokens, pos)
+    """
+    cfg = cfg or get_config(arch)
+    params = abstract_params(cfg, mesh)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, opt_cfg)
+        opt = abstract_opt_state(cfg, params, mesh)
+        batch = batch_specs(cfg, shape, mesh, with_labels=True)
+        return step, (params, opt, batch)
+
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, shape, mesh, with_labels=False)
+        fn = functools.partial(model_lib.prefill, cfg, max_len=shape.seq_len)
+        return (lambda p, b: fn(p, b)), (params, batch)
+
+    # decode: one new token against a seq_len KV cache
+    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len, mesh)
+    tokens = sharded_abstract(
+        {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)},
+        _batch_rule, mesh)["tokens"]
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    if mesh is not None:
+        pos = jax.ShapeDtypeStruct(
+            (), jnp.int32,
+            sharding=NamedSharding(mesh, logical_to_spec((), (), mesh)))
+    fn = functools.partial(model_lib.decode_step, cfg)
+    return fn, (params, cache, tokens, pos)

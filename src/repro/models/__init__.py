@@ -1,0 +1,6 @@
+"""Pure-JAX model zoo covering the 10 assigned architecture families."""
+
+from repro.models.config import (ModelConfig, MoESpec, MLASpec, SSMSpec,
+                                 CrossAttnSpec, EncoderSpec)  # noqa: F401
+from repro.models.model import (init_params, forward, loss_fn, init_cache,
+                                decode_step, prefill, param_logical_axes)  # noqa: F401

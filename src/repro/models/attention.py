@@ -1,0 +1,391 @@
+"""Attention mixers: GQA self-attention, MLA (DeepSeek-V2), cross-attention.
+
+Each mixer exposes:
+  init_*      -> weight tree
+  *_train     -> full-sequence causal (or cross) attention
+  *_decode    -> single-token step against a KV cache (dynamic_update_slice)
+
+Memory/sharding design (dry-run-validated on the (16,16) production mesh):
+
+* Long sequences use a blockwise online-softmax attention (`_flash_sdpa`,
+  a lax.scan over KV blocks) so peak logits memory is O(S x block), never
+  O(S x T).  The Pallas `flash_attention` kernel implements the same
+  contract for real TPUs; this XLA formulation is the GSPMD-shardable
+  reference the dry-run compiles.
+* Query heads are TP-sharded when `n_heads` divides the model axis
+  (mistral 32H, internlm2 48H, llama-vision 64H, ...).  When they do not
+  (yi 56H, qwen2 28H, whisper 8H), we instead shard the *query sequence*
+  over the model axis ("seq_tp") — attention math is position-parallel, so
+  this is exact, and it keeps per-device logits bounded.
+* Decode KV caches shard batch over "batch" and sequence over "kv_seq"
+  (model, then data when free — long_500k with batch 1 gets 256-way
+  sequence sharding).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import cdtype, dense, mm, norm_apply, rope
+from repro.parallel.api import current_mesh, shard
+
+__all__ = ["init_attn", "attn_train", "attn_decode", "init_mla", "mla_train",
+           "mla_decode", "init_cross", "cross_train", "cross_decode",
+           "init_attn_cache", "init_mla_cache", "sdpa", "attention"]
+
+_FLASH_BLOCK = 512
+_FLASH_MIN_T = 2048     # plain sdpa below this KV length
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _heads_divisible(n_heads: int) -> bool:
+    mesh = current_mesh()
+    if mesh is None:
+        return True
+    return n_heads % mesh.shape.get("model", 1) == 0
+
+
+def _shard_q(q: jax.Array) -> jax.Array:
+    """(B, S, H, hd): heads-TP when divisible, else sequence-TP."""
+    if _heads_divisible(q.shape[2]):
+        return shard(q, "batch", None, "heads", None)
+    return shard(q, "batch", "seq_tp", None, None)
+
+
+def _shard_kv(k: jax.Array) -> jax.Array:
+    """(B, T, KV, hd) train-time K/V: batch-sharded, heads when divisible."""
+    if _heads_divisible(k.shape[2]):
+        return shard(k, "batch", None, "heads", None)
+    return shard(k, "batch", None, None, None)
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+         scale: float, kv_len: Optional[jax.Array] = None,
+         q_offset: int = 0) -> jax.Array:
+    """Plain SDPA over full heads.  q: (B,S,H,hd); k/v: (B,T,H,hd)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    logits = mm("bshd,bthd->bhst", q, k) * scale
+    if causal and S > 1:
+        i = jax.lax.broadcasted_iota(jnp.int32, (S, T), 0) + q_offset
+        j = jax.lax.broadcasted_iota(jnp.int32, (S, T), 1)
+        logits = jnp.where((j <= i)[None, None], logits, _NEG_INF)
+    if kv_len is not None:
+        t = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, T), 3)
+        logits = jnp.where(t < kv_len, logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return mm("bhst,bthd->bshd", probs, v, out_dtype=q.dtype)
+
+
+def _flash_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+                scale: float, kv_len: Optional[jax.Array] = None,
+                q_offset: int = 0, block: int = _FLASH_BLOCK) -> jax.Array:
+    """Blockwise online-softmax attention (lax.scan over KV blocks).
+
+    Peak transient is (B,H,S,block) f32 instead of (B,H,S,T).  Exact (same
+    contract as sdpa).  k/v may carry KV < H heads: they are expanded to H
+    per BLOCK inside the body, so the full K/V tensors are read from HBM at
+    KV-head width (§Perf iteration: the pre-expanded form read G x the
+    bytes).  ``q_offset``: global row index of q's first position (causal
+    triangle splitting).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if T % block:
+        pad = block - T % block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_len = jnp.asarray(T, jnp.int32) if kv_len is None else kv_len
+        T = T + pad
+    nb = T // block
+    qf = (q.astype(jnp.float32) * scale)
+
+    def body(carry, ib):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, ib * block, block, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, ib * block, block, 1)
+        if G > 1:  # expand grouped KV heads per block (fusion-local)
+            kb = jnp.repeat(kb, G, axis=2)
+            vb = jnp.repeat(vb, G, axis=2)
+        s = jnp.einsum("bshd,bthd->bhst", qf, kb.astype(jnp.float32))
+        col = (jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, block), 3)
+               + ib * block)
+        if causal and S > 1:
+            row = jax.lax.broadcasted_iota(jnp.int32, (1, 1, S, 1), 2) \
+                + q_offset
+            s = jnp.where(col <= row, s, _NEG_INF)
+        if kv_len is not None:
+            s = jnp.where(col < kv_len, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    hd_v = v.shape[-1]
+    m0 = jnp.full((B, H, S), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, H, S, hd_v), jnp.float32)
+    # checkpoint the block body: scan's backward otherwise stacks the
+    # (B,H,S,block) f32 score/prob tensors for every block (tens of GiB at
+    # 32k); recomputing them leaves only the O(B*H*S) carries resident.
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                  jnp.arange(nb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)  # b h s d -> b s h d
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+              scale: Optional[float] = None,
+              kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Grouped attention entry point.  q: (B,S,H,hd); k/v: (B,T,KV,hd).
+
+    KV heads are expanded to the full H before the attention math (a
+    (KV, G) reshape would break head sharding whenever KV < the model
+    axis — yi/jamba/qwen3 all hit that); GQA's memory win lives in the
+    KV *cache*, not the transient compute tensors.  Dispatches to the
+    blockwise path for long KV (training/prefill); plain einsum otherwise
+    (short KV, and decode where S == 1 keeps logits tiny).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    use_flash = T >= _FLASH_MIN_T and S > 1
+    if G > 1 and not use_flash:
+        k = jnp.repeat(k, G, axis=2)   # flash expands per block instead
+        v = jnp.repeat(v, G, axis=2)
+    if S > 1:
+        # train/prefill: heads-TP when divisible, else batch-only (the
+        # blockwise scan slices T, so T must stay unsharded here)
+        if _heads_divisible(k.shape[2]):
+            k = shard(k, "batch", None, "heads", None)
+            v = shard(v, "batch", None, "heads", None)
+        else:
+            k = shard(k, "batch", None, None, None)
+            v = shard(v, "batch", None, None, None)
+    # decode (S == 1): k/v keep the cache's ("batch","kv_seq") sharding —
+    # XLA reduces the softmax over the sequence-sharded axis in place
+    if use_flash:
+        if causal and S == T and kv_len is None and S >= 2 * _FLASH_MIN_T:
+            out = _causal_split_flash(q, k, v, scale=scale, depth=2)
+        else:
+            out = _flash_sdpa(q, k, v, causal=causal, scale=scale,
+                              kv_len=kv_len)
+    else:
+        out = sdpa(q, k, v, causal=causal, scale=scale, kv_len=kv_len)
+    return out
+
+
+def _causal_split_flash(q, k, v, *, scale: float, depth: int,
+                        q_offset: int = 0) -> jax.Array:
+    """Causal triangle splitting (§Perf): a uniform KV scan executes every
+    block, including the ~half that are fully masked.  Splitting q in two —
+    the low half attends only the low half of K/V, the high half scans all
+    of it — removes 25% of block work per level (31% at depth 2), exactly;
+    the Pallas kernel gets the same effect from its pl.when block skip.
+    """
+    S = q.shape[1]
+    if depth == 0 or S < 2 * _FLASH_MIN_T or S % 2:
+        return _flash_sdpa(q, k, v, causal=True, scale=scale,
+                           q_offset=q_offset)
+    h = S // 2
+    lo = _causal_split_flash(q[:, :h], k[:, :h], v[:, :h], scale=scale,
+                             depth=depth - 1, q_offset=q_offset)
+    hi = _flash_sdpa(q[:, h:], k, v, causal=True, scale=scale,
+                     q_offset=q_offset + h)
+    return jnp.concatenate([lo, hi], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention
+# ---------------------------------------------------------------------------
+
+def init_attn(cfg: ModelConfig, key) -> Dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = cdtype(cfg)
+    s = 1.0 / math.sqrt(D)
+    w = {
+        "wq": jax.random.normal(k1, (D, H * hd), dt) * s,
+        "wk": jax.random.normal(k2, (D, KV * hd), dt) * s,
+        "wv": jax.random.normal(k3, (D, KV * hd), dt) * s,
+        "wo": jax.random.normal(k4, (H * hd, D), dt) * (s / math.sqrt(max(1, cfg.n_layers))),
+    }
+    if cfg.qkv_bias:
+        w["bq"] = jnp.zeros((H * hd,), dt)
+        w["bk"] = jnp.zeros((KV * hd,), dt)
+        w["bv"] = jnp.zeros((KV * hd,), dt)
+    return w
+
+
+def _qkv(cfg: ModelConfig, w, x, positions):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = dense(x, w["wq"], w.get("bq")).reshape(B, S, H, hd)
+    k = dense(x, w["wk"], w.get("bk")).reshape(B, S, KV, hd)
+    v = dense(x, w["wv"], w.get("bv")).reshape(B, S, KV, hd)
+    if cfg.pos_embed == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return _shard_q(q), _shard_kv(k), _shard_kv(v)
+
+
+def attn_train(cfg: ModelConfig, w, x: jax.Array,
+               positions: jax.Array, *, causal: bool = True) -> jax.Array:
+    B, S, D = x.shape
+    q, k, v = _qkv(cfg, w, x, positions)
+    out = attention(q, k, v, causal=causal)
+    out = _shard_q(out)
+    return dense(out.reshape(B, S, cfg.n_heads * cfg.hd), w["wo"])
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=None) -> Dict:
+    dt = dtype or cdtype(cfg)
+    shp = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+
+
+def _cache_spec():
+    return ("batch", "kv_seq", None, None)
+
+
+def attn_decode(cfg: ModelConfig, w, x: jax.Array, cache: Dict,
+                pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, D); pos: scalar int32 — index of the new token."""
+    B, S, D = x.shape
+    positions = jnp.zeros((S,), jnp.int32) + pos
+    q, k_new, v_new = _qkv(cfg, w, x, positions)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, pos, 0, 0))
+    k = shard(k, *_cache_spec())
+    v = shard(v, *_cache_spec())
+    out = attention(q, k, v, causal=False, kv_len=pos + 1)
+    y = dense(out.reshape(B, S, cfg.n_heads * cfg.hd), w["wo"])
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2): the KV cache stores only
+# the compressed latent c_kv (+ decoupled RoPE key), up-projected per use.
+# ---------------------------------------------------------------------------
+
+def init_mla(cfg: ModelConfig, key) -> Dict:
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 5)
+    dt = cdtype(cfg)
+    s = 1.0 / math.sqrt(D)
+    sl = 1.0 / math.sqrt(m.kv_lora_rank)
+    return {
+        "wq": jax.random.normal(ks[0], (D, H * qk), dt) * s,
+        "w_dkv": jax.random.normal(ks[1], (D, m.kv_lora_rank + m.qk_rope_dim), dt) * s,
+        "w_uk": jax.random.normal(ks[2], (m.kv_lora_rank, H * m.qk_nope_dim), dt) * sl,
+        "w_uv": jax.random.normal(ks[3], (m.kv_lora_rank, H * m.v_head_dim), dt) * sl,
+        "wo": jax.random.normal(ks[4], (H * m.v_head_dim, D), dt)
+              * (s / math.sqrt(max(1, cfg.n_layers))),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dt),
+    }
+
+
+def _mla_latent(cfg: ModelConfig, w, x, positions):
+    m = cfg.mla
+    dkv = dense(x, w["w_dkv"])
+    c_kv, k_pe = dkv[..., :m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+    c_kv = norm_apply(cfg, w["kv_norm"], c_kv)
+    k_pe = rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_pe
+
+
+def _mla_attend(cfg: ModelConfig, w, x, c_kv, k_rope, positions, *,
+                causal, kv_len=None):
+    m = cfg.mla
+    B, S = x.shape[:2]
+    T, H = c_kv.shape[1], cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    q = dense(x, w["wq"]).reshape(B, S, H, qk)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    k_nope = dense(c_kv, w["w_uk"]).reshape(B, T, H, m.qk_nope_dim)
+    v = dense(c_kv, w["w_uv"]).reshape(B, T, H, m.v_head_dim)
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (B, T, H, m.qk_rope_dim))
+    q_full = _shard_q(jnp.concatenate([q_nope, q_rope], axis=-1))
+    k_full = _shard_kv(jnp.concatenate([k_nope, k_rope_h], axis=-1))
+    v = _shard_kv(v)
+    out = attention(q_full, k_full, v, causal=causal,
+                    scale=1.0 / math.sqrt(qk), kv_len=kv_len)
+    return dense(out.reshape(B, S, H * m.v_head_dim), w["wo"])
+
+
+def mla_train(cfg: ModelConfig, w, x: jax.Array,
+              positions: jax.Array) -> jax.Array:
+    c_kv, k_rope = _mla_latent(cfg, w, x, positions)
+    return _mla_attend(cfg, w, x, c_kv, k_rope, positions, causal=True)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=None) -> Dict:
+    dt = dtype or cdtype(cfg)
+    m = cfg.mla
+    return {"ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+            "krope": jnp.zeros((batch, max_len, m.qk_rope_dim), dt)}
+
+
+def mla_decode(cfg: ModelConfig, w, x: jax.Array, cache: Dict,
+               pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    B, S, D = x.shape
+    positions = jnp.zeros((S,), jnp.int32) + pos
+    c_new, kr_new = _mla_latent(cfg, w, x, positions)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_new, (0, pos, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"], kr_new, (0, pos, 0))
+    ckv = shard(ckv, "batch", "kv_seq", None)
+    krope = shard(krope, "batch", "kv_seq", None)
+    y = _mla_attend(cfg, w, x, ckv, krope, positions, causal=False,
+                    kv_len=pos + 1)
+    return y, {"ckv": ckv, "krope": krope}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (VLM media layers; whisper decoder)
+# ---------------------------------------------------------------------------
+
+init_cross = init_attn  # same weight structure, no biases used
+
+
+def cross_kv(cfg: ModelConfig, w, media: jax.Array):
+    """Precompute K/V from media/encoder embeddings (B, M, D)."""
+    B, M, _ = media.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    k = dense(media, w["wk"]).reshape(B, M, KV, hd)
+    v = dense(media, w["wv"]).reshape(B, M, KV, hd)
+    return _shard_kv(k), _shard_kv(v)
+
+
+def cross_train(cfg: ModelConfig, w, x: jax.Array,
+                media: jax.Array) -> jax.Array:
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = _shard_q(dense(x, w["wq"]).reshape(B, S, H, hd))
+    k, v = cross_kv(cfg, w, media)
+    out = attention(q, k, v, causal=False)
+    return dense(out.reshape(B, S, H * hd), w["wo"])
+
+
+def cross_decode(cfg: ModelConfig, w, x: jax.Array,
+                 kv: Tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Decode-time cross-attn against precomputed media K/V."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = dense(x, w["wq"]).reshape(B, S, H, hd)
+    out = attention(q, kv[0], kv[1], causal=False)
+    return dense(out.reshape(B, S, H * hd), w["wo"])

@@ -1,0 +1,162 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based gather dispatch.
+
+Dispatch design (matters for the roofline): the classic one-hot-einsum
+dispatch charges O(tokens x E x C x D) *fake* matmul FLOPs to HLO, polluting
+the compute roofline term by >10x on qwen3 (128 experts, top-8).  We instead
+build integer slot maps from the router output (cumsum over one-hot int32 —
+cheap) and move tokens with gathers:
+
+  dispatch:  xbuf[g, e, c, :]  = x[g, src[g, e, c], :]     (take_along_axis)
+  experts:   ybuf = swiglu(xbuf @ We_in) @ We_out          (E-sharded einsum)
+  combine:   y[g, t]          = sum_k gate * ybuf[g, e(t,k), p(t,k), :]
+
+Expert weights and the (G, E, C, D) buffers shard E over the "expert"
+logical axis (model); the combine gather crossing the expert axis is where
+GSPMD inserts the all-to-all-class collective — the EP communication the
+paper's scoreboard would attribute to the interconnect, and a hillclimb
+target.  Capacity drops follow Switch semantics (first-come within the
+group, position >= C dropped).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import cdtype, dense, mm
+from repro.parallel.api import shard
+
+__all__ = ["init_moe", "moe_apply", "router_topk", "capacity"]
+
+
+def capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    m = cfg.moe
+    c = int(math.ceil(tokens_per_group * m.top_k * m.capacity_factor
+                      / m.n_experts))
+    return max(4, ((c + 3) // 4) * 4)  # pad to a multiple of 4
+
+
+def init_moe(cfg: ModelConfig, key) -> Dict:
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.n_experts, m.d_ff_expert
+    ks = jax.random.split(key, 6)
+    dt = cdtype(cfg)
+    s = 1.0 / math.sqrt(D)
+    w = {
+        "router": jax.random.normal(ks[0], (D, E), jnp.float32) * s,
+        "we_g": jax.random.normal(ks[1], (E, D, F), dt) * s,
+        "we_i": jax.random.normal(ks[2], (E, D, F), dt) * s,
+        "we_o": jax.random.normal(ks[3], (E, F, D), dt)
+                * (1.0 / math.sqrt(F) / math.sqrt(max(1, cfg.n_layers))),
+    }
+    if m.n_shared:
+        Fs = m.d_ff_shared or m.n_shared * F
+        w["shared"] = {
+            "wg": jax.random.normal(ks[4], (D, Fs), dt) * s,
+            "wi": jax.random.normal(ks[4], (D, Fs), dt) * s,
+            "wo": jax.random.normal(ks[5], (Fs, D), dt) * (1.0 / math.sqrt(Fs)),
+        }
+    return w
+
+
+def router_topk(cfg: ModelConfig, w_router, x) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Router: f32 softmax over experts, top-k, renormalised gates.
+
+    x: (G, S, D) -> gates (G, S, K) f32, idx (G, S, K) i32, aux_loss scalar.
+    """
+    m = cfg.moe
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32), w_router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss.
+    me = jnp.mean(probs, axis=(0, 1))                                # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx, m.n_experts, dtype=jnp.float32),
+                  axis=(0, 1, 2))                                    # (E,)
+    aux = m.n_experts * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def _slot_maps(cfg: ModelConfig, idx: jax.Array, C: int):
+    """Integer slot maps from expert assignments.
+
+    idx: (G, A) expert ids (A = S*K assignments in token order).
+    Returns:
+      pos   (G, A)   position of each assignment within its expert (i32)
+      keep  (G, A)   pos < C and valid
+      src   (G, E*C) assignment index feeding each expert slot (0 if empty)
+      used  (G, E*C) slot occupancy mask
+    """
+    m = cfg.moe
+    G, A = idx.shape
+    onehot = jax.nn.one_hot(idx, m.n_experts, dtype=jnp.int32)        # (G,A,E)
+    onehot = shard(onehot, "batch", None, "expert")
+    pos_all = jnp.cumsum(onehot, axis=1) - 1                          # (G,A,E)
+    pos_all = shard(pos_all, "batch", None, "expert")
+    pos = jnp.take_along_axis(pos_all, idx[..., None], axis=-1)[..., 0]
+    keep = pos < C
+    # out-of-capacity assignments scatter out of bounds -> mode="drop"
+    slot = jnp.where(keep, idx * C + pos, m.n_experts * C)
+    src = jnp.zeros((G, m.n_experts * C), jnp.int32)
+    arange = jnp.broadcast_to(jnp.arange(A, dtype=jnp.int32)[None], (G, A))
+    src = src.at[jnp.arange(G)[:, None], slot].set(arange, mode="drop")
+    used = jnp.zeros((G, m.n_experts * C), jnp.bool_)
+    used = used.at[jnp.arange(G)[:, None], slot].set(True, mode="drop")
+    return pos, keep, shard(src, "batch", "expert"), \
+        shard(used, "batch", "expert")
+
+
+def moe_apply(cfg: ModelConfig, w, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss).  Groups = batch rows."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    C = capacity(cfg, S)
+    # pin x's sharding with D on the model axis: D is the PASSTHROUGH dim
+    # of the dispatch/combine gathers, so GSPMD partitions them AND their
+    # backward scatter-adds (S-sharding would leave unsharded (B,S,D) f32
+    # gradient scatters — the gathered dim can't partition vs indices)
+    x = shard(x, "batch", None, "tp")
+    gates, idx, aux = router_topk(cfg, w["router"], x)
+
+    idx_flat = idx.reshape(B, S * K)                   # assignment order: (t, k)
+    pos, keep, src, used = _slot_maps(cfg, idx_flat, C)
+
+    # token index of each assignment; gather tokens into expert slot buffers
+    tok_of_src = src // K                                             # (B, E*C)
+    xbuf = jnp.take_along_axis(x, tok_of_src[..., None], axis=1)      # (B,E*C,D)
+    xbuf = xbuf * used[..., None].astype(x.dtype)
+    xbuf = xbuf.reshape(B, E, C, D)
+    xbuf = shard(xbuf, "batch", "expert", None, None)
+
+    # expert FFN (E-sharded batched einsum; f32 accumulation)
+    h = jax.nn.silu(mm("becd,edf->becf", xbuf, w["we_g"])) * \
+        mm("becd,edf->becf", xbuf, w["we_i"])
+    h = h.astype(x.dtype)
+    h = shard(h, "batch", "expert", None, None)
+    ybuf = mm("becf,efd->becd", h, w["we_o"], out_dtype=x.dtype)
+    # §Perf: reshard E@model -> D@model here (an all-to-all: each device
+    # keeps 1/|model| of ybuf) so the combine gather below is LOCAL in its
+    # passthrough dim.  Leaving ybuf expert-sharded makes GSPMD all-gather
+    # the full (B,E,C,D) buffer to every device — measured ~1.2 TB/device
+    # of all-gather wire on qwen3 train_4k vs ~E/(E-1) x local bytes here.
+    ybuf = shard(ybuf, "batch", None, None, "tp")
+
+    # combine: gather each kept assignment's slot output, weight, sum over k
+    slot = jnp.where(keep, idx_flat * C + pos, 0)                     # (B,S*K)
+    y_k = jnp.take_along_axis(ybuf.reshape(B, E * C, D), slot[..., None],
+                              axis=1)                                 # (B,S*K,D)
+    y_k = shard(y_k, "batch", None, "tp")
+    gk = (gates.reshape(B, S * K) * keep.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bad,ba->bad", y_k, gk).reshape(B, S, K, D).sum(axis=2)
+    y = shard(y, "batch", "seq", None)
+
+    if m.n_shared:
+        ws = w["shared"]
+        hs = jax.nn.silu(dense(x, ws["wg"])) * dense(x, ws["wi"])
+        y = y + dense(hs, ws["wo"])
+    return y, aux * m.router_aux_weight

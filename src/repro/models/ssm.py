@@ -1,0 +1,238 @@
+"""Mamba2 mixer: causal depthwise conv + chunked SSD (state-space duality).
+
+The SSD scan processes the sequence in chunks of ``cfg.ssm.chunk``:
+quadratic attention-like work *within* a chunk (MXU-friendly — this is the
+part the Pallas ``mamba2_ssd`` kernel tiles for VMEM), linear-cost state
+recurrence *across* chunks (lax.scan carry, f32).  O(S) overall — this is
+why the SSM/hybrid architectures run the long_500k shape.
+
+Shapes: x (B,S,nh,hd); B/C (B,S,G,ds) shared per group; dt (B,S,nh);
+state carry (B,nh,hd,ds).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import cdtype, dense
+from repro.parallel.api import shard
+
+__all__ = ["init_ssm", "ssm_train", "ssm_decode", "init_ssm_cache",
+           "ssd_chunked", "ssd_step", "d_inner_of"]
+
+
+def d_inner_of(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = d_inner_of(cfg)
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, nh, conv_dim
+
+
+def init_ssm(cfg: ModelConfig, key) -> Dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    d_in, nh, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    dt = cdtype(cfg)
+    sc = 1.0 / math.sqrt(D)
+    return {
+        # order: [z, x, B, C, dt]
+        "in_proj": jax.random.normal(ks[0], (D, 2 * d_in + 2 * s.n_groups
+                                             * s.d_state + nh), dt) * sc,
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, conv_dim), dt) * 0.5,
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((d_in,), dt),
+        "out_proj": jax.random.normal(ks[2], (d_in, D), dt)
+                    * (1.0 / math.sqrt(d_in) / math.sqrt(max(1, cfg.n_layers))),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    d_in, nh, _ = _dims(cfg)
+    gs = s.n_groups * s.d_state
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + gs, 2 * d_in + 2 * gs], axis=-1)
+    return z, xs, Bm, Cm, dt
+
+
+def _conv_train(w, x: jax.Array, d_conv: int) -> jax.Array:
+    """Causal depthwise conv over (B, S, C): sum of shifted taps."""
+    pads = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    S = x.shape[1]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for tau in range(d_conv):
+        y = y + pads[:, tau:tau + S, :].astype(jnp.float32) \
+            * w["conv_w"][tau].astype(jnp.float32)
+    y = y + w["conv_b"].astype(jnp.float32)
+    return jax.nn.silu(y).astype(x.dtype)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                h0: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x (B,S,nh,hd); dt (B,S,nh) f32 (post-softplus); A (nh,) f32 (negative);
+    Bm/Cm (B,S,G,ds).  Returns y (B,S,nh,hd) and final state (B,nh,hd,ds) f32.
+    """
+    B, S, nh, hd = x.shape
+    G, ds = Bm.shape[2], Bm.shape[3]
+    S_orig = S
+    if S % chunk:
+        # zero-pad to a chunk multiple: dt=0 makes padded steps identity
+        # state updates (exp(0)=1 decay, zero input contribution)
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    hpg = nh // G  # heads per group
+
+    xc = x.reshape(B, nc, chunk, nh, hd)
+    dtc = dt.reshape(B, nc, chunk, nh)
+    Bc = Bm.reshape(B, nc, chunk, G, ds)
+    Cc = Cm.reshape(B, nc, chunk, G, ds)
+
+    def body(h_prev, inp):
+        xq, dtq, Bq, Cq = inp                      # (B,chunk,...)
+        dA = dtq * A                               # (B,Q,nh) log-decay, <= 0
+        cum = jnp.cumsum(dA, axis=1)               # (B,Q,nh)
+        total = cum[:, -1]                         # (B,nh)
+        # intra-chunk: scores per group, decay per head
+        scores = jnp.einsum("bigs,bjgs->bijg", Cq.astype(jnp.float32),
+                            Bq.astype(jnp.float32))          # (B,Q,Q,G)
+        Lg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,Q,Q,nh)
+        i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+        causal = (j <= i)[None, :, :, None]
+        # mask BEFORE exp: masked entries have Lg > 0 (anti-causal decay
+        # sums), whose exp overflows and NaNs the backward via inf * 0
+        W = jnp.exp(jnp.where(causal, Lg, -1e30))             # (B,Q,Q,nh)
+        W = W * dtq[:, None, :, :]                            # x dt_j
+        W = W * scores.repeat(hpg, axis=-1) if G > 1 else \
+            W * scores[..., 0][..., None]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", W, xq.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        Ch = Cq.repeat(hpg, axis=2) if G > 1 else \
+            jnp.broadcast_to(Cq, (B, chunk, nh, ds))
+        y_inter = jnp.einsum("bihs,bhps->bihp", Ch.astype(jnp.float32), h_prev)
+        y_inter = y_inter * jnp.exp(cum)[..., None]
+        # state update
+        decay_j = jnp.exp(total[:, None] - cum)               # (B,Q,nh)
+        Bh = Bq.repeat(hpg, axis=2) if G > 1 else \
+            jnp.broadcast_to(Bq, (B, chunk, nh, ds))
+        dx = (dtq * decay_j)[..., None] * xq.astype(jnp.float32)  # (B,Q,nh,hd)
+        h_new = jnp.exp(total)[..., None, None] * h_prev + \
+            jnp.einsum("bjhp,bjhs->bhps", dx, Bh.astype(jnp.float32))
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    h_final, ys = jax.lax.scan(body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, nh, hd)
+    return y[:, :S_orig], h_final
+
+
+def ssd_step(x, dt, A, Bm, Cm, h):
+    """Single-token SSD update.  x (B,nh,hd); dt (B,nh); Bm/Cm (B,G,ds);
+    h (B,nh,hd,ds) f32.  Returns (y, h_new)."""
+    B, nh, hd = x.shape
+    G, ds = Bm.shape[1], Bm.shape[2]
+    hpg = nh // G
+    da = jnp.exp(dt * A)                                       # (B,nh)
+    Bh = Bm.repeat(hpg, axis=1) if G > 1 else \
+        jnp.broadcast_to(Bm, (B, nh, ds))
+    Ch = Cm.repeat(hpg, axis=1) if G > 1 else \
+        jnp.broadcast_to(Cm, (B, nh, ds))
+    h_new = da[..., None, None] * h + \
+        jnp.einsum("bhp,bhs->bhps", (dt[..., None] * x.astype(jnp.float32)),
+                   Bh.astype(jnp.float32))
+    y = jnp.einsum("bhs,bhps->bhp", Ch.astype(jnp.float32), h_new)
+    return y.astype(x.dtype), h_new
+
+
+def _gated_norm(cfg: ModelConfig, w_norm, y: jax.Array, z: jax.Array):
+    """Mamba2 gated RMSNorm: norm(y * silu(z)) in f32."""
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(ms + cfg.norm_eps)
+            * w_norm.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssm_train(cfg: ModelConfig, w, x: jax.Array) -> jax.Array:
+    s = cfg.ssm
+    B, S, D = x.shape
+    d_in, nh, conv_dim = _dims(cfg)
+    zxbcdt = dense(x, w["in_proj"])
+    z, xs, Bm, Cm, dtr = _split_proj(cfg, zxbcdt)
+    xbc = _conv_train(w, jnp.concatenate([xs, Bm, Cm], axis=-1), s.d_conv)
+    xbc = shard(xbc, "batch", None, "tp")
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+    # SSD compute shards the head dim (heads-per-device x full sequence);
+    # sequence sharding would make the chunk scan's dynamic slices collective
+    xh = shard(xs.reshape(B, S, nh, s.head_dim), "batch", None, "heads", None)
+    Bg = Bm.reshape(B, S, s.n_groups, s.d_state)
+    Cg = Cm.reshape(B, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + w["dt_bias"])
+    dt = shard(dt, "batch", None, "heads")
+    A = -jnp.exp(w["A_log"])
+    y, _ = ssd_chunked(xh, dt, A, Bg, Cg, s.chunk)
+    y = y + w["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = shard(y.reshape(B, S, d_in).astype(x.dtype), "batch", None, "tp")
+    return dense(_gated_norm(cfg, w["norm"], y, z), w["out_proj"])
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None) -> Dict:
+    s = cfg.ssm
+    d_in, nh, conv_dim = _dims(cfg)
+    dt = dtype or cdtype(cfg)
+    return {"conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dt),
+            "state": jnp.zeros((batch, nh, s.head_dim, s.d_state),
+                               jnp.float32)}
+
+
+def ssm_decode(cfg: ModelConfig, w, x: jax.Array, cache: Dict,
+               pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, D) -> (y (B,1,D), new cache).  O(1) per token."""
+    del pos  # state summarises the context; no positional input
+    s = cfg.ssm
+    B = x.shape[0]
+    d_in, nh, conv_dim = _dims(cfg)
+    zxbcdt = dense(x[:, 0], w["in_proj"])            # (B, ...)
+    z, xs, Bm, Cm, dtr = _split_proj(cfg, zxbcdt)
+    xbc_new = jnp.concatenate([xs, Bm, Cm], axis=-1)  # (B, conv_dim)
+    window = jnp.concatenate([cache["conv"], xbc_new[:, None]], axis=1)
+    conv = jnp.einsum("btc,tc->bc", window.astype(jnp.float32),
+                      w["conv_w"].astype(jnp.float32)) \
+        + w["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+    xh = xs.reshape(B, nh, s.head_dim)
+    Bg = Bm.reshape(B, s.n_groups, s.d_state)
+    Cg = Cm.reshape(B, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + w["dt_bias"])
+    A = -jnp.exp(w["A_log"])
+    y, h_new = ssd_step(xh, dt, A, Bg, Cg, cache["state"])
+    y = y + (w["D"].astype(jnp.float32)[:, None]
+             * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B, 1, d_in)
+    out = dense(_gated_norm(cfg, w["norm"], y, z[:, None]), w["out_proj"])
+    return out, {"conv": window[:, 1:], "state": h_new}

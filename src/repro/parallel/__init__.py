@@ -1,0 +1,4 @@
+"""Distribution layer: mesh axes, sharding rules, compression, pipeline."""
+
+from repro.parallel.api import (AxisSpec, current_axes, set_mesh, current_mesh,
+                                shard, logical_to_spec)  # noqa: F401

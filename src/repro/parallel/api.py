@@ -1,0 +1,172 @@
+"""Mesh/axis plumbing shared by the model zoo and the launchers.
+
+Design (mirrors MaxText-style logical axis rules, compacted):
+
+* Physical mesh axes: ``pod`` (slow DCN axis, multi-pod only), ``data``
+  (fast ICI, batch + FSDP), ``model`` (fast ICI, TP + EP).
+* Model code never names physical axes.  It annotates arrays with *logical*
+  axes (``"batch"``, ``"embed"``, ``"heads"``, ``"expert"``, ...) through
+  :func:`shard`; :class:`AxisSpec` maps logical -> physical with a
+  divisibility guard, so e.g. a 51865-row vocab silently drops the 16-way
+  ``model`` axis instead of failing to partition.
+* The active mesh + rules are installed by ``set_mesh`` (a context manager)
+  and queried via ``current_mesh``/``current_axes``.  Outside a mesh, every
+  annotation is a no-op, so the same model code runs in single-device smoke
+  tests and in the 512-device dry-run unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AxisSpec", "DEFAULT_RULES", "set_mesh", "current_mesh",
+           "current_axes", "shard", "logical_to_spec", "named_sharding"]
+
+
+Physical = Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisSpec:
+    """Logical-axis -> physical-mesh-axes mapping ("the rules")."""
+
+    rules: Tuple[Tuple[str, Physical], ...]
+
+    def physical(self, logical: Optional[str]) -> Physical:
+        if logical is None:
+            return ()
+        for name, phys in self.rules:
+            if name == logical:
+                return phys
+        return ()
+
+    def replace(self, **updates: Physical) -> "AxisSpec":
+        d = dict(self.rules)
+        d.update(updates)
+        return AxisSpec(tuple(d.items()))
+
+
+#: Baseline rules.  ``batch`` spans the pure-DP pod axis plus the data axis;
+#: ``fsdp`` (weight sharding) stays on the fast intra-pod ``data`` axis;
+#: tensor/expert parallelism on ``model``; context parallelism reuses
+#: ``data`` (long_500k runs with per-pod batch 1, so the axis is free).
+DEFAULT_RULES = AxisSpec((
+    ("batch", ("pod", "data")),
+    # weight/optimizer sharding: fast ICI axis first, then the pod axis
+    # (ZeRO-3 across pods — 235B-class states don't fit one pod's HBM;
+    # cross-pod weight gathers ride DCN, where grad compression applies)
+    ("fsdp", ("data", "pod")),
+    ("tp", ("model",)),
+    ("expert", ("model",)),
+    ("context", ("data",)),
+    ("vocab", ("model",)),
+    ("heads", ("model",)),
+    # sequence parallelism for the residual stream (Megatron-SP style):
+    # activations between blocks shard S over the model axis; GSPMD
+    # inserts the all-gather/reduce-scatter pairs around TP matmuls
+    ("seq", ("model",)),
+    # query-sequence TP, used when head counts don't divide the model axis
+    ("seq_tp", ("model",)),
+    # decode KV-cache sequence axis: model first, then data when free
+    # (long_500k batch=1 -> 256-way sequence sharding)
+    ("kv_seq", ("model", "data")),
+))
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.axes: AxisSpec = DEFAULT_RULES
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def set_mesh(mesh: Optional[Mesh], axes: AxisSpec = DEFAULT_RULES):
+    prev = (_STATE.mesh, _STATE.axes)
+    _STATE.mesh, _STATE.axes = mesh, axes
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _STATE.mesh, _STATE.axes = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE.mesh
+
+
+def current_axes() -> AxisSpec:
+    return _STATE.axes
+
+
+def _filter_axes(mesh: Mesh, dim: int, phys: Physical) -> Physical:
+    """Keep only mesh axes that exist and evenly divide ``dim``."""
+    out = []
+    size = 1
+    for ax in phys:
+        if ax not in mesh.shape:
+            continue
+        nsz = size * mesh.shape[ax]
+        if dim % nsz != 0:
+            continue
+        size = nsz
+        out.append(ax)
+    return tuple(out)
+
+
+def logical_to_spec(shape: Sequence[int],
+                    logical: Sequence[Optional[str]],
+                    mesh: Optional[Mesh] = None,
+                    axes: Optional[AxisSpec] = None) -> P:
+    """Build a PartitionSpec for ``shape`` from logical axis names.
+
+    Divisibility-guarded: axes that do not divide the dim (or are absent
+    from the mesh) are dropped — and an axis may be used by only one dim
+    (first wins), matching GSPMD validity rules.
+    """
+    mesh = mesh or current_mesh()
+    axes = axes or current_axes()
+    if mesh is None:
+        return P(*([None] * len(shape)))
+    assert len(shape) == len(logical), (shape, logical)
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, logical):
+        phys = [a for a in axes.physical(name) if a not in used]
+        phys = _filter_axes(mesh, dim, tuple(phys))
+        used.update(phys)
+        if not phys:
+            parts.append(None)
+        elif len(phys) == 1:
+            parts.append(phys[0])
+        else:
+            parts.append(tuple(phys))
+    return P(*parts)
+
+
+def named_sharding(shape: Sequence[int], logical: Sequence[Optional[str]],
+                   mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(shape, logical, mesh))
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with logical axes; identity without an active mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(x.shape, logical, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

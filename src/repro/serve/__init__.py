@@ -1,0 +1,3 @@
+"""Serving layer: batched engine over prefill + decode steps."""
+
+from repro.serve.engine import ServeEngine, GenerateResult  # noqa: F401

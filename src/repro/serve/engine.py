@@ -1,0 +1,66 @@
+"""Batched serving engine: continuous prefill + greedy/temperature decode.
+
+The engine jits one ``prefill`` and one ``decode_step`` per (batch, length)
+bucket and runs synchronous batched generation — the serve-side driver for
+the decode_32k / long_500k dry-run cells, and example ``serve_demo.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step, init_cache, prefill
+
+__all__ = ["ServeEngine", "GenerateResult"]
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray          # (B, n_generated)
+    prompt_len: int
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b: prefill(cfg, p, b, max_len=max_len))
+        self._decode = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t,
+                                                                pos))
+
+    def _sample(self, logits, key, temperature: float):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature,
+                                      axis=-1).astype(jnp.int32)
+
+    def generate(self, tokens: np.ndarray, *, n_steps: int = 32,
+                 temperature: float = 0.0, seed: int = 0,
+                 extras: Optional[Dict] = None) -> GenerateResult:
+        """tokens: (B, S) int32 prompt batch -> greedy/temperature decode."""
+        B, S = tokens.shape
+        assert S + n_steps <= self.max_len
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if extras:
+            batch.update(extras)
+        logits, cache = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(seed)
+        out: List[np.ndarray] = []
+        tok = self._sample(logits[:, -1], key, temperature)[:, None]
+        for i in range(n_steps):
+            out.append(np.asarray(tok))
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(S + i))
+            tok = self._sample(logits[:, -1], sub, temperature)[:, None]
+        return GenerateResult(tokens=np.concatenate(out, axis=1),
+                              prompt_len=S, steps=n_steps)

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, train step, checkpointing, fault tolerance."""
+
+from repro.train.optim import (OptConfig, init_opt_state, adamw_update,
+                               lr_schedule)  # noqa: F401
+from repro.train.step import make_train_step, make_eval_step  # noqa: F401

@@ -1,0 +1,153 @@
+"""Mesh-agnostic sharded checkpointing with async save + elastic restore.
+
+Layout: one ``.npy`` per pytree leaf (full logical array) + ``meta.json``
+(step, tree manifest).  Because leaves are stored at full logical shape,
+a restore may target a *different* mesh / device count than the save —
+``restore`` re-shards via ``jax.device_put`` with the target NamedShardings
+(elastic scaling: grow or shrink the pod between runs).
+
+Saves run on a background thread (``wait()`` joins before the next save),
+overlapping checkpoint I/O with training compute.  ``latest_step`` +
+atomic directory rename give crash consistency: a checkpoint is visible
+only after its final rename.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "Checkpointer"]
+
+_SEP = "::"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else f"#{p.idx}" for p in path)
+        out[key or "_root"] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, *, extra: Optional[Dict] = None):
+    """Blocking save of ``tree`` at ``step`` (atomic via rename)."""
+    ckpt_dir = Path(ckpt_dir)
+    tmp = ckpt_dir / f".tmp_step_{step}"
+    final = ckpt_dir / f"step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    manifest = {}
+    for key, leaf in _flatten(tree).items():
+        arr = np.asarray(jax.device_get(leaf))
+        shape, dtype = list(arr.shape), str(arr.dtype)
+        arr = np.ascontiguousarray(arr)  # NB: promotes 0-d to (1,)
+        fname = f"{len(manifest):06d}.npy"
+        # store raw bits (uintN view): np.save cannot round-trip ml_dtypes
+        # like bfloat16; the true dtype/shape live in the manifest
+        np.save(tmp / fname, arr.view(np.dtype(f"uint{8 * arr.itemsize}")))
+        manifest[key] = {"file": fname, "shape": shape, "dtype": dtype}
+    meta = {"step": step, "manifest": manifest, "extra": extra or {}}
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.glob("step_*")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like, *, step: Optional[int] = None,
+            sharding_fn: Optional[Callable] = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``sharding_fn(path_key, np_array)`` may return a
+    Sharding to re-shard onto the *current* mesh (elastic restore); None
+    keeps default placement."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    meta = json.loads((d / "meta.json").read_text())
+    manifest = meta["manifest"]
+
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(manifest)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    import jax.numpy as jnp
+    leaves = {}
+    for key in flat_like:
+        ent = manifest[key]
+        arr = np.load(d / ent["file"]).view(jnp.dtype(ent["dtype"])) \
+            .reshape(ent["shape"])
+        like_leaf = flat_like[key]
+        if tuple(arr.shape) != tuple(like_leaf.shape):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != expected "
+                f"{like_leaf.shape}")
+        if arr.dtype != like_leaf.dtype:
+            arr = arr.astype(like_leaf.dtype)
+        sh = sharding_fn(key, arr) if sharding_fn else None
+        leaves[key] = jax.device_put(arr, sh) if sh is not None \
+            else jax.device_put(arr)
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    ordered = []
+    for path, _ in paths:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else f"#{p.idx}" for p in path)
+        ordered.append(leaves[key or "_root"])
+    return jax.tree_util.tree_unflatten(treedef, ordered), step
+
+
+class Checkpointer:
+    """Async checkpointer: ``maybe_save`` returns immediately; the write
+    happens on a worker thread (joined before the next save or on close)."""
+
+    def __init__(self, ckpt_dir: str, *, every: int = 100, keep: int = 3):
+        self.dir = Path(ckpt_dir)
+        self.every = every
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def maybe_save(self, step: int, tree, *, extra=None, force=False):
+        if not force and (step == 0 or step % self.every):
+            return False
+        self.wait()
+        # materialise on the main thread (device_get), write on the worker
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _work():
+            save(self.dir, step, host_tree, extra=extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=_work, daemon=True)
+        self._thread.start()
+        return True
+
+    def _gc(self):
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.dir.glob("step_*"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)

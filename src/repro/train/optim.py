@@ -1,0 +1,96 @@
+"""AdamW with cosine schedule + global-norm clipping, in pure JAX.
+
+Optimizer moments are f32 and inherit the parameters' FSDP/TP sharding, so
+per-device optimizer state is params_bytes * 4 / n_devices (ZeRO-equivalent
+under full FSDP).  Parameters stay bf16 (no f32 master copy; the f32 `m`
+carries the low-order bits' signal — recorded in DESIGN.md numerics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "adamw_update", "lr_schedule",
+           "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms / biases / 1-d params (standard practice)."""
+    name = ""
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            name = str(p.key)
+            break
+    return name not in ("ln1", "ln2", "lnx", "final_norm", "norm", "scale",
+                        "bias", "A_log", "D", "dt_bias", "conv_b", "gate",
+                        "kv_norm", "bq", "bk", "bv", "bi", "bo")
+
+
+def adamw_update(cfg: OptConfig, params, grads,
+                 state) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        gf = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        if _decay_mask(path):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(m2)
+        new_v.append(v2)
+    params2 = jax.tree_util.tree_unflatten(treedef, new_p)
+    m_tree = jax.tree_util.tree_unflatten(treedef, new_m)
+    v_tree = jax.tree_util.tree_unflatten(treedef, new_v)
+    new_state = {"m": m_tree, "v": v_tree, "step": step + 1}
+    return params2, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,77 @@
+"""jit-able train / eval / serve step builders.
+
+``make_train_step(cfg)`` returns ``step(params, opt_state, batch)`` doing
+forward + backward + AdamW — the function every ``train_*`` dry-run cell
+lowers.  Gradient all-reduce across data/pod axes is implicit in GSPMD
+(batch-sharded loss => reduced grads); the optional int8 pod-axis gradient
+compression wraps the grads pytree before the update
+(``repro.parallel.compression``).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import loss_fn
+from repro.train.optim import OptConfig, adamw_update
+
+__all__ = ["make_train_step", "make_eval_step"]
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[OptConfig] = None,
+                    grad_transform: Optional[Callable] = None,
+                    microbatches: Optional[int] = None) -> Callable:
+    """``microbatches`` > 1 enables gradient accumulation: the global batch
+    is split along dim 0 and scanned, dividing activation memory by the
+    microbatch count (grads accumulate in f32).  Defaults to
+    ``cfg.microbatches``."""
+    opt_cfg = opt_cfg or OptConfig()
+    n_micro = microbatches or getattr(cfg, "microbatches", 1)
+    acc_dtype = jnp.dtype(getattr(cfg, "grad_accum_dtype", "float32"))
+
+    def loss_grads(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+
+    def step(params, opt_state, batch) -> Tuple:
+        if n_micro == 1:
+            (loss, metrics), grads = loss_grads(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                (l, m), g = loss_grads(params, mb)
+                acc_g, acc_l, acc_ce, acc_aux = acc
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dtype), acc_g, g)
+                return (acc_g, acc_l + l, acc_ce + m["ce"],
+                        acc_aux + m["aux"]), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            (grads, loss, ce, aux), _ = jax.lax.scan(
+                body, (zeros, 0.0, 0.0, 0.0), mbs)
+            inv = 1.0 / n_micro
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss, metrics = loss * inv, {"ce": ce * inv, "aux": aux * inv}
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, opt_metrics = adamw_update(opt_cfg, params, grads,
+                                                      opt_state)
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return params, opt_state, out
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    def step(params, batch) -> Dict[str, jax.Array]:
+        loss, metrics = loss_fn(cfg, params, batch)
+        return {"loss": loss, **metrics}
+    return step

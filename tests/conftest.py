@@ -1,0 +1,8 @@
+import os
+
+# Tests EXECUTE on CPU: keep the f32-upcast for bf16 dots inside while
+# bodies (XLA:CPU DotThunk limitation).  The dry-run sets this to 0.
+os.environ.setdefault("REPRO_CPU_F32_DOTS", "1")
+# NOTE: no --xla_force_host_platform_device_count here — smoke tests and
+# benches must see 1 device (assignment requirement).  Multi-device tests
+# spawn subprocesses with their own XLA_FLAGS.

@@ -1,0 +1,48 @@
+"""Synthetic data pipeline: determinism, learnable structure, prefetch."""
+
+import numpy as np
+
+from repro.data.pipeline import SyntheticLM, prefetch_to_device
+
+
+def test_deterministic_by_step():
+    d1 = SyntheticLM(512, batch=4, seq_len=32, seed=9)
+    d2 = SyntheticLM(512, batch=4, seq_len=32, seed=9)
+    b1, b2 = d1(17), d2(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["labels"], b2["labels"])
+
+
+def test_steps_differ():
+    d = SyntheticLM(512, batch=4, seq_len=32, seed=9)
+    assert not np.array_equal(d(0)["tokens"], d(1)["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    d = SyntheticLM(512, batch=2, seq_len=16, seed=0)
+    b = d(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_correlation_structure():
+    """With correlation=1.0 the next token is a fixed permutation of the
+    current one — a model CAN learn this stream."""
+    d = SyntheticLM(128, batch=8, seq_len=64, seed=3, correlation=1.0)
+    b = d(0)
+    toks, labs = b["tokens"], b["labels"]
+    assert (labs == d._perm[toks]).mean() == 1.0
+
+
+def test_tokens_in_range():
+    d = SyntheticLM(100, batch=4, seq_len=32, seed=1)
+    b = d(5)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 100
+
+
+def test_prefetch_yields_all():
+    d = SyntheticLM(64, batch=2, seq_len=8, seed=0)
+    src = (d(i) for i in range(5))
+    got = list(prefetch_to_device(src, size=2))
+    assert len(got) == 5
+    np.testing.assert_array_equal(np.asarray(got[3]["tokens"]),
+                                  d(3)["tokens"])

@@ -1,0 +1,45 @@
+"""Functional MFMA semantics (D = C + A@B, blocked) vs numpy."""
+
+import numpy as np
+import pytest
+
+from repro.core import isa
+from repro.core.functional import mfma_apply, operand_dtypes, random_operands
+
+
+@pytest.mark.parametrize("name", ["fp32_16x16x16fp16", "fp32_4x4x1fp32",
+                                  "fp64_4x4x4fp64", "i32_16x16x16i8",
+                                  "fp32_16x16x4fp32"])
+def test_mfma_matches_numpy(name):
+    a, b, c = random_operands(name, seed=3)
+    d = mfma_apply(name, a, b, c)
+    instr = isa.lookup(name)
+    an = np.asarray(a, np.float64)
+    bn = np.asarray(b, np.float64)
+    cn = np.asarray(c, np.float64)
+    want = cn + np.einsum("bmk,bkn->bmn", an, bn)
+    assert d.shape == instr.d_shape
+    tol = 1e-2 if instr.in_dtype in ("fp16", "bf16") else 1e-6
+    np.testing.assert_allclose(np.asarray(d, np.float64), want, rtol=tol,
+                               atol=tol)
+
+
+def test_i8_exact():
+    """Integer MFMA must be exact (no rounding)."""
+    a, b, c = random_operands("i32_16x16x16i8", seed=0)
+    d = mfma_apply("i32_16x16x16i8", a, b, c)
+    want = np.asarray(c, np.int64) + np.einsum(
+        "bmk,bkn->bmn", np.asarray(a, np.int64), np.asarray(b, np.int64))
+    np.testing.assert_array_equal(np.asarray(d, np.int64), want)
+
+
+def test_registry_shapes_consistent():
+    for name, instr in isa.MFMA_REGISTRY.items():
+        assert instr.flops == 2 * instr.m * instr.n * instr.k * instr.blocks
+        assert instr.a_shape[0] == instr.b_shape[0] == instr.d_shape[0]
+
+
+def test_operand_dtypes():
+    import jax.numpy as jnp
+    in_dt, out_dt = operand_dtypes("fp32_16x16x16fp16")
+    assert in_dt == jnp.float16 and out_dt == jnp.float32

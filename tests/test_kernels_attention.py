@@ -1,0 +1,113 @@
+"""flash_attention + decode_attention kernels: sweeps vs full-softmax oracle,
+plus model-level blockwise path (_flash_sdpa) vs plain sdpa equivalence."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.RandomState(3)
+TOL = dict(rtol=5e-2, atol=5e-2)
+
+
+def _qkv(B, S, T, H, KV, hd, dt):
+    q = jnp.asarray(RNG.randn(B, S, H, hd), dt)
+    k = jnp.asarray(RNG.randn(B, T, KV, hd), dt)
+    v = jnp.asarray(RNG.randn(B, T, KV, hd), dt)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 128, 4, 4, 64),      # MHA
+    (2, 256, 8, 2, 64),      # GQA 4:1
+    (1, 128, 8, 1, 128),     # MQA
+])
+@pytest.mark.parametrize("dt", [jnp.bfloat16, jnp.float32])
+def test_flash_attention_sweep(B, S, H, KV, hd, dt):
+    q, k, v = _qkv(B, S, S, H, KV, hd, dt)
+    y = ops.flash_attention(q, k, v, causal=True, block_q=64, block_kv=64)
+    yr = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **TOL)
+
+
+def test_flash_noncausal():
+    q, k, v = _qkv(2, 128, 128, 4, 4, 32, jnp.float32)
+    y = ops.flash_attention(q, k, v, causal=False, block_q=64, block_kv=64)
+    yr = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_flash_block_shape_invariance():
+    """Result must not depend on the BlockSpec tiling."""
+    q, k, v = _qkv(1, 256, 256, 4, 4, 64, jnp.float32)
+    y1 = ops.flash_attention(q, k, v, block_q=64, block_kv=64)
+    y2 = ops.flash_attention(q, k, v, block_q=128, block_kv=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("kv_len", [1, 65, 128, 255])
+def test_decode_attention_kv_len(kv_len):
+    B, T, H, KV, hd = 2, 256, 8, 2, 64
+    q = jnp.asarray(RNG.randn(B, H, hd), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, T, KV, hd), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, T, KV, hd), jnp.float32)
+    y = ops.decode_attention(q, k, v, jnp.int32(kv_len), block_kv=64)
+    yr = ref.decode_attention_ref(q, k, v, jnp.int32(kv_len))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_decode_ignores_stale_cache():
+    """Positions >= kv_len must not affect the result (cache garbage)."""
+    B, T, H, KV, hd = 1, 128, 4, 4, 32
+    q = jnp.asarray(RNG.randn(B, H, hd), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, T, KV, hd), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, T, KV, hd), jnp.float32)
+    y1 = ops.decode_attention(q, k, v, jnp.int32(64), block_kv=64)
+    k2 = k.at[:, 64:].set(1e4)
+    v2 = v.at[:, 64:].set(-1e4)
+    y2 = ops.decode_attention(q, k2, v2, jnp.int32(64), block_kv=64)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_model_flash_vs_plain_sdpa():
+    """The model's XLA blockwise path == plain softmax attention."""
+    from repro.models.attention import _flash_sdpa, sdpa
+    B, S, H, hd = 2, 256, 4, 32
+    q = jnp.asarray(RNG.randn(B, S, H, hd), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, H, hd), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, H, hd), jnp.float32)
+    yf = _flash_sdpa(q, k, v, causal=True, scale=0.17, block=64)
+    yp = sdpa(q, k, v, causal=True, scale=0.17)
+    np.testing.assert_allclose(np.asarray(yf), np.asarray(yp), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_model_flash_ragged_tail():
+    """T not a multiple of the block: padding + kv_len mask path."""
+    from repro.models.attention import _flash_sdpa, sdpa
+    B, S, H, hd = 1, 100, 2, 16
+    q = jnp.asarray(RNG.randn(B, S, H, hd), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, H, hd), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, H, hd), jnp.float32)
+    yf = _flash_sdpa(q, k, v, causal=False, scale=0.25, block=64)
+    yp = sdpa(q, k, v, causal=False, scale=0.25)
+    np.testing.assert_allclose(np.asarray(yf), np.asarray(yp), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_kernel_matches_model_path():
+    """Pallas kernel == the model's XLA formulation (same contract)."""
+    from repro.models.attention import attention
+    B, S, H, KV, hd = 1, 128, 4, 2, 64
+    q, k, v = _qkv(B, S, S, H, KV, hd, jnp.float32)
+    y_kernel = ops.flash_attention(q, k, v, causal=True, block_q=64,
+                                   block_kv=64)
+    y_model = attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model),
+                               rtol=1e-4, atol=1e-4)

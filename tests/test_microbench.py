@@ -1,0 +1,44 @@
+"""Listing-1 microbenchmark construction + Eq. 1 extraction."""
+
+import pytest
+
+from repro.core.machine import get_machine
+from repro.core.microbench import (build_listing1, eq1_latency,
+                                   measure_latency, t_total)
+from repro.core.scoreboard import simulate_program
+
+M = get_machine("mi200")
+
+
+def test_listing1_structure():
+    prog = build_listing1("fp32_4x4x1fp32", 4, padding_nops=2)
+    ops = [i.opcode for i in prog]
+    assert ops == ["s_waitcnt", "s_nop", "s_nop", "s_memtime",
+                   "mfma", "mfma", "mfma", "mfma", "s_memtime", "s_waitcnt"]
+
+
+def test_listing1_needs_two_mfma():
+    """The final MFMA isn't waited on (no data dep on s_memtime) — one
+    MFMA alone is unmeasurable (Section IV-C)."""
+    with pytest.raises(ValueError):
+        build_listing1("fp32_4x4x1fp32", 1)
+
+
+def test_eq1_roundtrip():
+    for name, lat in [("fp32_4x4x1fp32", 8), ("fp64_16x16x4fp64", 32)]:
+        for n in (2, 3, 4, 5):
+            assert measure_latency(M, name, n) == pytest.approx(lat)
+
+
+def test_final_mfma_not_counted():
+    """T_total includes only (N-1) MFMAs + probe overhead: the second
+    s_memtime doesn't wait for the last MFMA (scalar pipe independence)."""
+    prog = build_listing1("fp32_16x16x4fp32", 3)
+    res = simulate_program(M, prog)
+    end = res.by_tag("end")
+    last_mfma = res.by_tag("mfma2")
+    assert end.issue < last_mfma.complete  # probe raced ahead of MFMA #3
+
+
+def test_eq1_formula_direct():
+    assert eq1_latency(2 * 32 + M.t_memtime + M.t_inst, 3, M) == pytest.approx(32)

@@ -1,0 +1,89 @@
+"""MoE router/dispatch invariants + properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.models.moe import _slot_maps, capacity, init_moe, moe_apply, \
+    router_topk
+
+CFG = get_config("qwen3-moe-235b-a22b").reduced()
+
+
+def test_capacity_formula():
+    c = capacity(CFG, 64)
+    m = CFG.moe
+    assert c >= 64 * m.top_k / m.n_experts
+    assert c % 4 == 0
+
+
+def test_router_gates_normalised():
+    w = init_moe(CFG, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, CFG.d_model),
+                          jnp.bfloat16)
+    gates, idx, aux = router_topk(CFG, w["router"], x)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+    assert idx.shape == (2, 32, CFG.moe.top_k)
+    assert float(aux) > 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_slot_maps_consistent(seed):
+    """For every kept assignment, src[slot] maps back to the assignment."""
+    rng = np.random.RandomState(seed)
+    G, A, E = 2, 48, CFG.moe.n_experts
+    C = 8
+    idx = jnp.asarray(rng.randint(0, E, (G, A)), jnp.int32)
+    pos, keep, src, used = _slot_maps(CFG, idx, C)
+    pos, keep, src, used = map(np.asarray, (pos, keep, src, used))
+    for g in range(G):
+        for a in range(A):
+            if keep[g, a]:
+                slot = idx[g, a] * C + pos[g, a]
+                assert used[g, slot]
+                assert src[g, slot] == a
+    # positions within an expert are unique and dense from 0
+    for g in range(G):
+        for e in range(E):
+            ps = sorted(pos[g, (np.asarray(idx[g]) == e) & keep[g]])
+            assert ps == list(range(len(ps)))
+
+
+def test_moe_uniform_experts_equals_dense():
+    """If every expert has IDENTICAL weights and capacity is ample, the MoE
+    output equals a single dense expert MLP (gates sum to 1)."""
+    import dataclasses
+    cfg = dataclasses.replace(
+        CFG, moe=dataclasses.replace(CFG.moe, capacity_factor=8.0))
+    w = init_moe(cfg, jax.random.PRNGKey(0))
+    w = dict(w)
+    for k in ("we_g", "we_i", "we_o"):
+        w[k] = jnp.broadcast_to(w[k][:1], w[k].shape)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 32, cfg.d_model),
+                          jnp.bfloat16) * 0.5
+    y, _ = moe_apply(cfg, w, x)
+    # dense single-expert reference
+    h = jax.nn.silu(x.astype(jnp.float32) @ w["we_g"][0].astype(jnp.float32)) \
+        * (x.astype(jnp.float32) @ w["we_i"][0].astype(jnp.float32))
+    y_ref = h @ w["we_o"][0].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), rtol=6e-2,
+                               atol=6e-2)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor tiny, some assignments are dropped and the
+    output norm shrinks (never NaN)."""
+    import dataclasses
+    cfg = dataclasses.replace(
+        CFG, moe=dataclasses.replace(CFG.moe, capacity_factor=0.05))
+    w = init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, cfg.d_model),
+                          jnp.bfloat16)
+    y, aux = moe_apply(cfg, w, x)
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    assert np.isfinite(float(aux))

@@ -1,0 +1,69 @@
+"""AdamW optimizer + schedule + clipping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.optim import (OptConfig, adamw_update, global_norm,
+                               init_opt_state, lr_schedule)
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                    min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9]                       # warmup rises
+    assert abs(lrs[10] - 1e-3) < 1e-4            # peak after warmup
+    assert lrs[-1] < lrs[50]                     # cosine decays
+    assert lrs[-1] >= 0.1 * 1e-3 - 1e-9          # floor
+
+
+def test_adamw_minimises_quadratic():
+    cfg = OptConfig(lr=0.05, warmup_steps=0, total_steps=200,
+                    weight_decay=0.0, clip_norm=100.0)
+    params = {"x": jnp.array([3.0, -2.0])}
+    state = init_opt_state(params)
+    for _ in range(150):
+        grads = {"x": 2 * params["x"]}
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    assert float(jnp.abs(params["x"]).max()) < 0.1
+
+
+def test_grad_clipping():
+    cfg = OptConfig(lr=1e-3, warmup_steps=0, clip_norm=1.0)
+    params = {"x": jnp.zeros((4,))}
+    state = init_opt_state(params)
+    huge = {"x": jnp.full((4,), 1e6)}
+    p2, state, m = adamw_update(cfg, params, huge, state)
+    assert float(m["grad_norm"]) > 1e5           # reported raw norm
+    assert np.isfinite(np.asarray(p2["x"])).all()
+    # post-clip first moment bounded by (1-b1) * clip_norm
+    assert float(jnp.abs(state["m"]["x"]).max()) <= 1.0
+
+
+def test_weight_decay_mask():
+    """Norm-like leaves ('ln1', 'bias') are not decayed."""
+    cfg = OptConfig(lr=0.1, warmup_steps=0, weight_decay=1.0, clip_norm=1e9)
+    params = {"wq": jnp.ones((2, 2)), "ln1": jnp.ones((2,))}
+    state = init_opt_state(params)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    p2, _, _ = adamw_update(cfg, params, zero_g, state)
+    assert float(p2["wq"][0, 0]) < 1.0           # decayed
+    assert float(p2["ln1"][0]) == pytest.approx(1.0)  # not decayed
+
+
+def test_moments_are_f32():
+    params = {"w": jnp.ones((2, 2), jnp.bfloat16)}
+    state = init_opt_state(params)
+    assert state["m"]["w"].dtype == jnp.float32
+    assert state["v"]["w"].dtype == jnp.float32
+    grads = {"w": jnp.ones((2, 2), jnp.bfloat16)}
+    p2, s2, _ = adamw_update(OptConfig(), params, grads, state)
+    assert p2["w"].dtype == jnp.bfloat16         # params keep their dtype
+    assert s2["v"]["w"].dtype == jnp.float32
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)

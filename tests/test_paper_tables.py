@@ -1,0 +1,89 @@
+"""Reproduction of the paper's result tables (II-VI).
+
+The simulator is deterministic (no KVM jitter), so measured latencies must
+match the 'Expected' column exactly for every N in {2..5} — the paper's
+real-hardware samples deviate by ~1.4% due to KVM mode; Section V
+attributes all deviation to measurement noise, not model error.
+"""
+
+import pytest
+
+from repro.core import isa
+from repro.core.machine import get_machine
+from repro.core.microbench import latency_table, measure_latency
+from repro.core.whatif import scale_table
+
+# Tables II & III: MI200, {instr: expected_cycles}
+MI200_EXPECTED = {
+    "fp64_16x16x4fp64": 32,
+    "fp32_4x4x1fp32": 8,
+    "fp32_16x16x4fp32": 32,
+    "fp32_16x16x16fp16": 32,
+    "i32_16x16x16i8": 32,
+    "fp64_4x4x4fp64": 16,
+    "fp32_4x4x4fp16": 8,
+}
+
+# Tables IV & V: MI300 (fp16 16x16x16 halved; i8 16x16x16 removed)
+MI300_EXPECTED = {
+    "fp64_16x16x4fp64": 32,
+    "fp32_4x4x1fp32": 8,
+    "fp32_16x16x4fp32": 32,
+    "fp32_16x16x16fp16": 16,
+    "fp64_4x4x4fp64": 16,
+    "fp32_4x4x4fp16": 8,
+}
+
+
+@pytest.mark.parametrize("gpu,expected", [("mi200", MI200_EXPECTED),
+                                          ("mi300", MI300_EXPECTED)])
+def test_tables_latency(gpu, expected):
+    t = latency_table(get_machine(gpu))
+    assert set(t) == set(expected)
+    for name, exp in expected.items():
+        for n in (2, 3, 4, 5):
+            assert t[name][n] == pytest.approx(exp), (name, n)
+
+
+def test_mi300_improved_fp16_latency():
+    """Section III-A: MI300 halves fp32_16x16x16fp16 (32 -> 16 cycles)."""
+    assert isa.mfma_cycles("mi200", "fp32_16x16x16fp16") == 32
+    assert isa.mfma_cycles("mi300", "fp32_16x16x16fp16") == 16
+
+
+def test_i8_removed_on_mi300():
+    """Section III-A: i32_16x16x16i8 was removed on MI300."""
+    assert isa.mfma_cycles("mi200", "i32_16x16x16i8") == 32
+    with pytest.raises(isa.UnsupportedInstructionError):
+        isa.mfma_cycles("mi300", "i32_16x16x16i8")
+
+
+def test_table_vi_scale2():
+    """Table VI: --mfma-scale=2 doubles every measured MI300 latency."""
+    m = get_machine("mi300")
+    t = scale_table(m, scales=(1.0, 2.0))
+    for name, per_scale in t.items():
+        assert per_scale[2.0] == pytest.approx(2 * per_scale[1.0]), name
+
+
+@pytest.mark.parametrize("scale", [0.5, 1.5, 3.0])
+def test_scale_generalises(scale):
+    m = get_machine("mi300", mfma_scale=scale)
+    got = measure_latency(m, "fp64_16x16x4fp64", 4)
+    assert got == pytest.approx(round(32 * scale))
+
+
+def test_gpr_idx_instructions_unsupported():
+    """Section VI: s_set_gpr_idx-mode MFMAs are not implemented."""
+    for name in ("fp32_32x32x8fp16", "fp32_32x32x1fp32"):
+        with pytest.raises(isa.UnsupportedInstructionError):
+            isa.mfma_cycles("mi200", name)
+
+
+def test_padding_does_not_change_measurement():
+    """Blue-highlighted rows needed i-cache padding on real HW; in the
+    deterministic simulator padding must leave Eq. 1's answer unchanged."""
+    m = get_machine("mi200")
+    for pad in (0, 4, 16):
+        assert measure_latency(m, "fp32_16x16x4fp32", 3,
+                               padding_nops=pad) == pytest.approx(32)

@@ -1,0 +1,123 @@
+"""Scoreboard semantics (paper Section III) + hypothesis properties."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.machine import get_machine
+from repro.core.program import Wavefront, Workload, mfma, s_memtime, v_alu
+from repro.core.scoreboard import simulate, simulate_program
+
+M200 = get_machine("mi200")
+LAT = M200.mfma_cycles("fp32_16x16x16fp16")  # 32
+
+
+def _chain(n, name="fp32_16x16x16fp16"):
+    """n data-dependent MFMAs (D=C accumulate chain)."""
+    return [mfma(name, d="d", a="a", b="b", c="d", tag=f"m{i}")
+            for i in range(n)]
+
+
+def _indep(n, name="fp32_16x16x16fp16"):
+    return [mfma(name, d=f"d{i}", a=f"a{i}", b=f"b{i}", c=f"c{i}")
+            for i in range(n)]
+
+
+def test_no_intra_wf_pipelining_dependent():
+    """Dependent MFMAs serialise at full latency."""
+    res = simulate_program(M200, _chain(4))
+    issues = [r.issue for r in res.records if r.opcode == "mfma"]
+    assert [b - a for a, b in zip(issues, issues[1:])] == [LAT] * 3
+
+
+def test_no_intra_wf_pipelining_independent():
+    """Even INDEPENDENT MFMAs on one SIMD can't overlap in the MCE: the
+    NRDY_MATRIX_CORE counter drains first (no multi-stage pipelining)."""
+    res = simulate_program(M200, _indep(4))
+    issues = [r.issue for r in res.records if r.opcode == "mfma"]
+    assert [b - a for a, b in zip(issues, issues[1:])] == [LAT] * 3
+
+
+def test_cross_simd_parallelism():
+    """WFs on different SIMD units use different MCEs concurrently."""
+    wfs = [Wavefront(i, _indep(4), cu=0, simd=i) for i in range(4)]
+    res = simulate(M200, Workload(wfs))
+    solo = simulate(M200, Workload([Wavefront(0, _indep(4), cu=0, simd=0)]))
+    assert res.makespan == solo.makespan  # 4 SIMDs: perfect overlap
+
+
+def test_same_simd_wfs_serialise():
+    """Two WFs on the same SIMD contend for its single MCE."""
+    wfs = [Wavefront(i, _indep(2), cu=0, simd=0) for i in range(2)]
+    res = simulate(M200, Workload(wfs))
+    assert res.makespan >= 4 * LAT
+    assert res.stall_cycles.get("nrdy_matrix_core", 0) > 0
+
+
+def test_independent_valu_overlaps_mce():
+    """Non-MCE work without data deps proceeds while the MCE is busy."""
+    prog = [mfma("fp32_16x16x16fp16", d="d", a="a", b="b", c="c"),
+            v_alu("x", "y"),
+            v_alu("z", "x")]
+    res = simulate_program(M200, prog)
+    mf, va1, va2 = res.records
+    assert va1.issue < mf.complete  # VALU issued under MCE shadow
+    assert va2.issue < mf.complete
+
+
+def test_dependent_valu_stalls_on_mfma():
+    prog = [mfma("fp32_16x16x16fp16", d="d", a="a", b="b", c="c"),
+            v_alu("x", "d")]  # reads MFMA result
+    res = simulate_program(M200, prog)
+    mf, va = res.records
+    assert va.issue >= mf.complete
+
+
+def test_memtime_samples_issue_cycle():
+    res = simulate_program(M200, [s_memtime("t0", tag="t0"),
+                                  s_memtime("t1", tag="t1")])
+    # blocking: second probe issues exactly t_memtime later
+    assert res.value("t1") - res.value("t0") == M200.t_memtime
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(2, 8),
+       name=st.sampled_from(["fp64_16x16x4fp64", "fp32_4x4x1fp32",
+                             "fp32_16x16x4fp32", "fp32_16x16x16fp16",
+                             "fp64_4x4x4fp64", "fp32_4x4x4fp16"]))
+def test_property_chain_time_linear(n, name):
+    """T_total of a dependent chain == (N-1)*lat + t_memtime + t_inst
+    (the closed form Eq. 1 inverts) for every instruction and N."""
+    from repro.core.microbench import build_listing1, t_total
+    lat = M200.mfma_cycles(name)
+    res = simulate_program(M200, build_listing1(name, n))
+    assert t_total(res) == (n - 1) * lat + M200.t_memtime + M200.t_inst
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_wf=st.integers(1, 12), tiles=st.integers(1, 8))
+def test_property_makespan_bounds(n_wf, tiles):
+    """Makespan is bounded by work/TPUT below and serial execution above,
+    and adding WFs never increases total makespan per unit work."""
+    wfs = [Wavefront(i, _indep(tiles), cu=0, simd=i % M200.simd_per_cu)
+           for i in range(n_wf)]
+    res = simulate(M200, Workload(wfs))
+    total = n_wf * tiles
+    lower = -(-total // M200.simd_per_cu) * LAT  # ceil division
+    upper = total * LAT
+    assert lower <= res.makespan <= upper
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_deterministic(seed):
+    """Identical workloads simulate identically (no KVM jitter)."""
+    import random
+    rng = random.Random(seed)
+    n_wf = rng.randint(1, 6)
+    wfs = [Wavefront(i, _indep(rng.randint(1, 5)), cu=0, simd=rng.randint(0, 3))
+           for i in range(n_wf)]
+    r1 = simulate(M200, Workload(wfs))
+    r2 = simulate(M200, Workload(wfs))
+    assert r1.makespan == r2.makespan
+    assert r1.mce_busy == r2.mce_busy

@@ -1,0 +1,79 @@
+"""logical_to_spec divisibility guard + rule behaviour (no fake devices:
+uses a (1,1) mesh for plumbing and pure-function checks for the guard)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.api import (DEFAULT_RULES, AxisSpec, logical_to_spec,
+                                set_mesh, shard, current_mesh)
+
+
+class _FakeMesh:
+    """Duck-typed mesh exposing .shape for guard tests."""
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def _spec(shape, logical, mesh_shape):
+    return logical_to_spec(shape, logical, _FakeMesh(mesh_shape))
+
+
+def test_divisible_dims_shard():
+    assert _spec((64000, 7168), ("vocab", "fsdp"),
+                 {"data": 16, "model": 16}) == P("model", "data")
+
+
+def test_indivisible_dims_drop():
+    # 51865 % 16 != 0 -> vocab axis dropped
+    assert _spec((51865, 512), ("vocab", "fsdp"),
+                 {"data": 16, "model": 16}) == P(None, "data")
+
+
+def test_axis_used_once():
+    # batch takes pod+data; fsdp (data) already consumed -> dropped
+    assert _spec((256, 4096, 16), ("batch", "seq", "fsdp"),
+                 {"pod": 2, "data": 16, "model": 16}) \
+        == P(("pod", "data"), "model", None)
+
+
+def test_batch_multi_axis_partial():
+    # batch 8 on (pod=2, data=16): pod divides, pod*data doesn't -> pod only
+    assert _spec((8, 10), ("batch", None), {"pod": 2, "data": 16}) \
+        == P("pod", None)
+
+
+def test_kv_seq_uses_model_then_data():
+    # long_500k: batch 1 -> both axes free for the sequence
+    assert _spec((1, 524288, 8, 128), ("batch", "kv_seq", None, None),
+                 {"data": 16, "model": 16}) == P(None, ("model", "data"), None,
+                                                 None)
+
+
+def test_missing_axis_ignored():
+    assert _spec((128, 128), ("batch", None), {"model": 4}) == P(None, None)
+
+
+def test_no_mesh_is_noop():
+    import jax.numpy as jnp
+    assert current_mesh() is None
+    x = jnp.ones((4, 4))
+    y = shard(x, "batch", None)  # must not raise without a mesh
+    assert (y == x).all()
+
+
+def test_set_mesh_plumbing():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with set_mesh(mesh):
+        assert current_mesh() is mesh
+        spec = logical_to_spec((16, 16), ("fsdp", "tp"))
+        assert spec == P("data", "model")
+    assert current_mesh() is None
+
+
+def test_custom_rules():
+    rules = AxisSpec((("batch", ("x",)),))
+    assert logical_to_spec((8,), ("batch",), _FakeMesh({"x": 4}),
+                           rules) == P("x")
+    assert logical_to_spec((8,), ("unknown",), _FakeMesh({"x": 4}),
+                           rules) == P(None)

@@ -1,0 +1,49 @@
+"""End-to-end behaviour: a tiny LM actually LEARNS the synthetic stream
+(loss decreases substantially), through the full production stack — data
+pipeline -> train step (grad accumulation) -> fault-tolerant controller ->
+checkpoint -> serve engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.models import init_params
+from repro.serve.engine import ServeEngine
+from repro.train.fault_tolerance import FailureInjector, TrainController
+from repro.train.optim import OptConfig, init_opt_state
+from repro.train.step import make_train_step
+
+
+def test_end_to_end_learns(tmp_path):
+    cfg = get_config("qwen2-7b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = OptConfig(lr=3e-3, warmup_steps=5, total_steps=60,
+                        weight_decay=0.01)
+    step = jax.jit(make_train_step(cfg, opt_cfg, microbatches=2))
+    data = SyntheticLM(cfg.vocab_size, batch=8, seq_len=64, seed=0,
+                       correlation=1.0)
+
+    def data_fn(i):
+        return {k: jnp.asarray(v) for k, v in data(i).items()}
+
+    ctl = TrainController(step, tmp_path / "ck", ckpt_every=20,
+                          injector=FailureInjector(at_steps=[30]))
+    state = (params, init_opt_state(params))
+    state, log = ctl.run(state, data_fn, n_steps=60)
+
+    losses = [e["loss"] for e in log if "loss" in e]
+    first = float(np.mean(losses[:5]))
+    last = float(np.mean(losses[-5:]))
+    assert ctl.restarts == 1                    # failure happened + recovered
+    assert last < first - 1.0, (first, last)    # actually learned
+
+    # the learned model predicts the fixed permutation greedily
+    eng = ServeEngine(cfg, state[0], max_len=96)
+    prompt = data(999)["tokens"][:2, :16]
+    res = eng.generate(prompt, n_steps=8)
+    want = prompt[:, -1]
+    got = res.tokens[:, 0]
+    acc = float((got == data._perm[want]).mean())
+    assert acc >= 0.5, acc                      # >> 1/512 chance level
