@@ -1,10 +1,11 @@
 """Framework-scale what-if (the paper's Section V-B payoff): decompose the
 compiled smoke-scale train/decode steps of assigned architectures into MFMA
-streams and predict matrix-unit-bound time on MI200 / MI300 / TPU-v5e,
-under mfma_scale in {1, 2}.
+streams and predict matrix-unit-bound time on EVERY device in the
+``repro.arch`` registry (MI200/MI300/MI300X, TPU v5e/v5p), under
+``mfma_scale`` overlays in {1, 2}.
 
 This is the gem5-for-PyTorch story at static-analysis speed: the same HLO
-the dry-run validates is re-costed against each machine's MFMA table.
+the dry-run validates is re-costed against each device's capability spec.
 """
 
 from __future__ import annotations
@@ -20,6 +21,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.arch import Overlay, list_devices
 from repro.configs import get_config
 from repro.core.hlo_analysis import analyze
 from repro.core.hlo_bridge import predict_dots
@@ -54,9 +56,10 @@ def main():
         txt = _compiled_text(arch)
         stats = analyze(txt)
         dt = (time.perf_counter() - t0) * 1e6
-        for machine_name in ("mi200", "mi300", "tpu_v5e"):
+        for machine_name in list_devices():
             for scale in (1.0, 2.0):
-                m = get_machine(machine_name, mfma_scale=scale)
+                m = get_machine(machine_name,
+                                overlay=Overlay(mfma_scale=scale))
                 pred = predict_dots(m, stats.dots)
                 rows.append((
                     f"whatif/{arch}/{machine_name}/x{scale:g}", dt,

@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Lint every registered ``repro.arch`` DeviceSpec (runs in CI).
+
+Checks, per device:
+  * positive clock, sane topology (>=1 CU/SIMD; MXU dims positive);
+  * every cycle-table instruction exists in the MFMA registry, with
+    positive integer cycles and a boolean ``validated`` flag;
+  * known dtypes: every instruction's operand dtype is one the
+    instruction-selection policy can map from HLO;
+  * validated-flag provenance: entries claiming ``validated=True`` must
+    match the paper's measured tables (mi200/mi300) — derived devices may
+    not inherit validation they never earned;
+  * no s_set_gpr_idx-mode instruction carries a timing entry (the timing
+    model cannot execute them, paper Section VI);
+  * bandwidths/links are non-negative, and an advertised peak (if any)
+    stays within 4x of the spec-derived peak.
+
+Exit code 0 = catalog clean; 1 = violations (printed one per line).
+
+    PYTHONPATH=src python scripts/check_device_specs.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.arch import HLO_DTYPE_TO_IN, get_device, list_devices  # noqa: E402
+from repro.arch.registry import MI200_CYCLES, MI300_CYCLES  # noqa: E402
+from repro.core import isa  # noqa: E402
+
+# The hardware-measured ground truth (paper Tables II-V): only these
+# (device, instr) pairs may carry validated=True.
+_VALIDATED_GROUND_TRUTH = {
+    ("mi200", name): cycles
+    for name, (cycles, v) in MI200_CYCLES.items() if v
+}
+_VALIDATED_GROUND_TRUTH.update({
+    ("mi300", name): cycles
+    for name, (cycles, v) in MI300_CYCLES.items() if v
+})
+
+_KNOWN_IN_DTYPES = set(HLO_DTYPE_TO_IN.values())
+
+
+def check_spec(name: str) -> list:
+    spec = get_device(name)
+    errs = []
+
+    def err(msg):
+        errs.append(f"{name}: {msg}")
+
+    if spec.clock_mhz <= 0:
+        err(f"non-positive clock {spec.clock_mhz}")
+    if spec.cu_count < 1 or spec.simd_per_cu < 1 or spec.mce_per_simd < 1:
+        err("topology must have >=1 CU/SIMD/MCE")
+    if spec.mxu_count < 0 or (spec.mxu_count and spec.mxu_dim < 1):
+        err("bad MXU configuration")
+    if not spec.has_cycle_table and not spec.mxu_count:
+        err("neither a cycle table nor MXUs: no matrix path at all")
+
+    mem, ic = spec.memory, spec.interconnect
+    for f in ("l1i_latency", "l1d_latency", "scalar_latency", "lds_latency",
+              "l2_latency", "mem_latency", "valu_latency"):
+        if getattr(mem, f) < 0:
+            err(f"negative {f}")
+    for f, v in (("l2_bw", mem.l2_bw), ("lds_bw", mem.lds_bw)):
+        if v < 0:
+            err(f"negative {f}")
+    # hbm_bw/link_bw must be strictly positive: the roofline divides by
+    # them (a zero would silently produce an infinite memory/collective
+    # time for any device registered per the ROADMAP recipe).
+    if mem.hbm_bw <= 0:
+        err("hbm_bw must be positive (roofline memory term)")
+    if ic.link_bw <= 0:
+        err("link_bw must be positive (roofline collective term)")
+    if ic.links < 1:
+        err("interconnect needs >=1 link")
+
+    for instr, entry in spec.cycle_table.items():
+        meta = isa.MFMA_REGISTRY.get(instr)
+        if meta is None:
+            err(f"cycle table names unknown instruction {instr!r}")
+            continue
+        if not isinstance(entry.cycles, int) or entry.cycles < 1:
+            err(f"{instr}: cycles must be a positive int, "
+                f"got {entry.cycles!r}")
+        if not isinstance(entry.validated, bool):
+            err(f"{instr}: validated flag must be bool, "
+                f"got {entry.validated!r}")
+        if meta.in_dtype not in _KNOWN_IN_DTYPES:
+            err(f"{instr}: operand dtype {meta.in_dtype!r} has no HLO "
+                "mapping in the selection policy")
+        if meta.gpr_idx_mode:
+            err(f"{instr}: s_set_gpr_idx-mode instructions are not "
+                "executable by the timing model (Section VI)")
+        if entry.validated:
+            truth = _VALIDATED_GROUND_TRUTH.get((name, instr))
+            if truth is None:
+                err(f"{instr}: claims validated=True but ({name}, {instr}) "
+                    "is not in the paper's measured tables")
+            elif truth != entry.cycles:
+                err(f"{instr}: validated entry is {entry.cycles} cycles "
+                    f"but the paper measured {truth}")
+
+    # Peak must be derivable for EVERY device (the roofline and bridge
+    # call it unconditionally) — e.g. a GPU table missing the canonical
+    # dense instruction would pass every per-entry check yet crash there.
+    try:
+        derived = spec.peak_matrix_tflops * 1e12
+    except Exception as e:  # noqa: BLE001 - any failure is a catalog bug
+        err(f"cannot derive peak matrix throughput: {e}")
+        derived = None
+    if spec.peak_flops and derived:
+        if not (derived / 4 <= spec.peak_flops <= derived * 4):
+            err(f"advertised peak {spec.peak_flops:.3g} FLOP/s is >4x off "
+                f"the spec-derived {derived:.3g}")
+    return errs
+
+
+def main() -> int:
+    failures = []
+    names = list(list_devices())
+    for name in names:
+        failures += check_spec(name)
+    for f in failures:
+        print(f"FAIL {f}")
+    print(f"checked {len(names)} device specs "
+          f"({', '.join(names)}): "
+          f"{'OK' if not failures else f'{len(failures)} violations'}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

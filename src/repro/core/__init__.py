@@ -1,15 +1,20 @@
 """The paper's contribution: MCE/MFMA functional + timing models.
 
+Device capability data (cycle tables, topology, memory, interconnect,
+clocks) lives in the declarative :mod:`repro.arch` registry; this package
+holds the execution models that consume it.
+
 Public surface:
-  isa            — MFMA registry + MI200/MI300 cycle tables (+ what-if scale)
-  machine        — MachineModel (paper Table I params; TPU v5e analytic model)
+  isa            — MFMA instruction registry (+ legacy cycle-table views)
+  machine        — MachineModel facade over repro.arch.DeviceSpec
   program        — instruction-stream IR
   scoreboard     — event-driven CU/SIMD/MCE simulator (NRDY_MATRIX_CORE)
   microbench     — Listing-1 streams + Eq. 1 extraction (Tables II-V)
-  whatif         — --mfma-scale analysis (Table VI)
+  whatif         — --mfma-scale / overlay-grid analysis (Table VI)
   functional     — D = C + A@B oracle semantics
   hlo_bridge     — compiled-HLO -> MFMA streams -> predicted kernel time
 """
 
 from repro.core import isa, machine, program, scoreboard, microbench  # noqa: F401
-from repro.core.machine import MI200, MI300, TPU_V5E, get_machine  # noqa: F401
+from repro.core.machine import (MI200, MI300, TPU_V5E, as_machine,  # noqa: F401
+                                get_machine, list_machines)

@@ -30,8 +30,9 @@ import re
 from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.arch import select as arch_select
 from repro.core import isa
-from repro.core.machine import MachineModel
+from repro.core.machine import MachineModel, as_machine
 from repro.core.program import Program, Wavefront, Workload, mfma
 from repro.core.scoreboard import simulate
 
@@ -43,8 +44,8 @@ _BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
           "s32": 4, "u32": 4, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
           "s64": 8, "u64": 8, "pred": 1, "s4": 1, "u4": 1}
 
-_DTYPE_TO_IN = {"f64": "fp64", "f32": "fp32", "bf16": "bf16", "f16": "fp16",
-                "s8": "i8", "u8": "i8", "f8e4m3fn": "fp8"}
+# HLO dtype -> MFMA operand dtype mapping is a device-layer policy now:
+_DTYPE_TO_IN = arch_select.HLO_DTYPE_TO_IN
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _DEF_RE = re.compile(r"(%[\w.\-]+)\s*=\s*(\w+)\[([\d,]*)\]")
@@ -254,20 +255,21 @@ def collective_bytes_total(hlo_text: str) -> float:
 # ---------------------------------------------------------------------------
 
 def best_instr(machine: MachineModel, hlo_dtype: str) -> Optional[str]:
-    """Highest-throughput supported MFMA instruction for an operand dtype."""
-    want = _DTYPE_TO_IN.get(hlo_dtype)
-    if want is None or machine.gpu_table is None:
+    """Highest-throughput supported MFMA instruction for an operand dtype.
+
+    Thin wrapper: instruction selection is a device property owned by
+    :mod:`repro.arch.select`; the machine contributes its backing spec and
+    the active ``mfma_scale``.
+    """
+    machine = as_machine(machine)
+    spec = machine.spec
+    if spec is None and machine.gpu_table is not None:
+        from repro.arch.registry import get_device
+        spec = get_device(machine.gpu_table)   # hand-built legacy model
+    if spec is None or not spec.has_cycle_table:
         return None
-    best, best_key = None, (-1.0, -1)
-    for name in isa.supported_instructions(machine.gpu_table):
-        inst = isa.lookup(name)
-        if inst.in_dtype != want:
-            continue
-        # primary: throughput; tie-break: larger tiles (rocBLAS-realistic)
-        key = (inst.flops / machine.mfma_cycles(name), inst.macs)
-        if key > best_key:
-            best, best_key = name, key
-    return best
+    return arch_select.best_mfma_for_hlo(spec, hlo_dtype,
+                                         mfma_scale=machine.mfma_scale)
 
 
 def mfma_count(dot: DotOp, instr_name: str) -> int:
@@ -293,7 +295,12 @@ def predict_dots(machine: MachineModel,
                  dots_with_counts: Sequence[Tuple[DotOp, float]],
                  fallback_dtype: str = "bf16",
                  repetition_factor: float = 1.0) -> Prediction:
-    """Matrix-unit-bound time for an explicit (dot, executed-count) list."""
+    """Matrix-unit-bound time for an explicit (dot, executed-count) list.
+
+    ``machine`` may be a MachineModel, a ``repro.arch.DeviceSpec``, or a
+    registered device name.
+    """
+    machine = as_machine(machine)
     instr_mix: Dict[str, int] = defaultdict(int)
     total_cycles = 0.0
     total_mfma = 0.0
@@ -341,6 +348,7 @@ def predict(machine: MachineModel, hlo_text: str,
     :func:`repro.core.hlo_analysis.analyze` for loop-aware counts — XLA:CPU's
     own ``cost_analysis()`` counts while bodies once).
     """
+    machine = as_machine(machine)
     dots = parse_dots(hlo_text)
     parsed_flops = float(sum(d.flops for d in dots))
     rep = 1.0
@@ -367,6 +375,7 @@ def simulate_gemm_cu(machine: MachineModel, instr_name: str, *,
     WFs are assigned round-robin to SIMD units; with n_wf >= simd_per_cu the
     analytic throughput (mce_per_cu MFMAs per mfma_cycles) should be reached.
     """
+    machine = as_machine(machine)
     wfs = [Wavefront(w, gemm_stream(instr_name, tiles_per_wf, w),
                      cu=0, simd=w % machine.simd_per_cu)
            for w in range(n_wf)]

@@ -1,27 +1,31 @@
-"""MFMA instruction registry and per-GPU cycle tables.
+"""MFMA instruction registry (functional metadata, gem5-parity quirks).
 
 This is the JAX-side analogue of the paper's additions to
-``src/arch/amdgpu/vega/insts/instructions.hh`` (functional metadata) and the
-``mfma_cycles`` lookup table in ``src/gpu-compute/compute_unit.cc`` (timing).
+``src/arch/amdgpu/vega/insts/instructions.hh``: the static shape/dtype
+metadata of every V_MFMA_* instruction the framework knows about, plus the
+``s_set_gpr_idx`` addressing-mode restrictions of Section VI.
+
+**Timing lives in** :mod:`repro.arch`: per-device cycle tables (the paper's
+``mfma_cycles`` lookup in ``src/gpu-compute/compute_unit.cc``) are rows of
+each :class:`repro.arch.DeviceSpec` in the device registry
+(``repro.arch.registry``), where cross-checked entries carry
+``validated=True`` provenance (Tables II-V "Expected" column) and
+ISA-manual-pattern extensions carry ``validated=False``.  The
+module-level ``MI200_CYCLES`` / ``MI300_CYCLES`` dicts and the
+``mfma_cycles`` / ``supported_instructions`` functions here are
+backward-compatible views over that registry.
 
 Every matrix-core instruction computes ``D = C + A @ B`` where, per block,
 ``A`` is MxK, ``B`` is KxN and ``C``/``D`` are MxN; ``blocks`` independent
 such products execute per instruction.  Instruction names follow AMD's
 ``V_MFMA_[out]_[M]x[N]x[K][_Bb]_[in]`` convention, normalised here to e.g.
 ``fp32_16x16x16fp16`` / ``f32_32x32x4_2b_bf16``.
-
-Cycle counts marked ``validated=True`` are the "Expected" column of the
-paper's Tables II-V (cross-checked against real MI210/MI300 hardware in the
-paper).  Entries marked ``validated=False`` follow the ISA-manual pattern
-(Table 27 of the MI300 ISA manual) and are included so the HLO bridge can
-account real workloads; they carry the same latency class as their validated
-shape-mates.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional, Tuple
+from typing import Dict, Tuple
 
 __all__ = [
     "MFMAInstr",
@@ -42,7 +46,9 @@ class UnsupportedInstructionError(KeyError):
     Mirrors the paper's Section VI: MFMA instructions that use the
     ``s_set_gpr_idx`` addressing mode (e.g. ``fp32_32x32x8fp16`` and
     ``fp32_32x32x1fp32``) are unsupported in gem5's timing model, and some
-    instructions (e.g. ``i32_16x16x16i8``) were removed on MI300.
+    instructions (e.g. ``i32_16x16x16i8``) were removed on MI300.  Also
+    raised for unknown device names (consistently across ``mfma_cycles``
+    *and* ``supported_instructions``).
     """
 
 
@@ -115,54 +121,24 @@ MFMA_REGISTRY: Dict[str, MFMAInstr] = {
 }
 
 
-# ---------------------------------------------------------------------------
-# Cycle tables.  Keys absent from a table mean "not supported on that GPU".
-# Paper-validated entries (Tables II-V "Expected" column) are listed first.
-# ---------------------------------------------------------------------------
-
-#: (cycles, validated)
-MI200_CYCLES: Dict[str, Tuple[int, bool]] = {
-    "fp64_16x16x4fp64": (32, True),
-    "fp32_4x4x1fp32": (8, True),
-    "fp32_16x16x4fp32": (32, True),
-    "fp32_16x16x16fp16": (32, True),
-    "i32_16x16x16i8": (32, True),
-    "fp64_4x4x4fp64": (16, True),
-    "fp32_4x4x4fp16": (8, True),
-    # ISA-manual-pattern latency classes (same class as shape-mates):
-    "fp32_32x32x2fp32": (64, False),
-    "fp32_32x32x4bf16": (64, False),
-    "fp32_16x16x8bf16": (32, False),
-}
-
-MI300_CYCLES: Dict[str, Tuple[int, bool]] = {
-    "fp64_16x16x4fp64": (32, True),
-    "fp32_4x4x1fp32": (8, True),
-    "fp32_16x16x4fp32": (32, True),
-    # MI300 improved this latency vs MI200 (32 -> 16), Table IV:
-    "fp32_16x16x16fp16": (16, True),
-    "fp64_4x4x4fp64": (16, True),
-    "fp32_4x4x4fp16": (8, True),
-    # i32_16x16x16i8: REMOVED on MI300 (paper Section III-A).
-    # New on MI300: 2-block bf16 variant, same cycles as MI200 1-block:
-    "f32_32x32x4_2b_bf16": (64, False),
-    "fp32_16x16x16bf16": (16, False),
-    "i32_16x16x32i8": (16, False),
-    "i32_32x32x16i8": (32, False),
-    "fp32_16x16x32fp8": (16, False),
-}
-
-_TABLES: Mapping[str, Mapping[str, Tuple[int, bool]]] = {
-    "mi200": MI200_CYCLES,
-    "mi300": MI300_CYCLES,
-}
-
-
 def lookup(name: str) -> MFMAInstr:
     try:
         return MFMA_REGISTRY[name]
     except KeyError as e:
         raise UnsupportedInstructionError(f"unknown MFMA instruction {name!r}") from e
+
+
+def _spec(gpu: str):
+    """Resolve a device name against the registry with this module's
+    documented error contract (UnsupportedInstructionError throughout)."""
+    # Lazy import: repro.arch lazily imports this module for instruction
+    # metadata; resolving at call time keeps the layering acyclic.
+    from repro.arch import registry
+    try:
+        return registry.get_device(gpu)
+    except registry.UnknownDeviceError as e:
+        raise UnsupportedInstructionError(
+            f"unknown GPU model {gpu!r}") from e
 
 
 def mfma_cycles(gpu: str, name: str, *, mfma_scale: float = 1.0,
@@ -171,34 +147,38 @@ def mfma_cycles(gpu: str, name: str, *, mfma_scale: float = 1.0,
 
     ``mfma_scale`` is the paper's ``--mfma-scale`` what-if parameter: the
     default latency is multiplied and rounded, exactly as in gem5.
+
+    Thin view over ``repro.arch``: equivalent to
+    ``get_device(gpu).mfma_cycles(name, ...)``.
     """
-    instr = lookup(name)
-    if instr.gpr_idx_mode and not allow_gpr_idx:
-        raise UnsupportedInstructionError(
-            f"{name} uses the s_set_gpr_idx addressing mode, which the "
-            "gem5-parity timing model does not support (paper Section VI)")
-    table = _TABLES.get(gpu.lower())
-    if table is None:
-        raise UnsupportedInstructionError(f"unknown GPU model {gpu!r}")
-    if name not in table:
-        raise UnsupportedInstructionError(
-            f"{name} is not supported on {gpu} "
-            "(e.g. i32_16x16x16i8 was removed on MI300)")
-    base, _ = table[name]
-    return max(1, int(round(base * mfma_scale)))
+    return _spec(gpu).mfma_cycles(name, mfma_scale=mfma_scale,
+                                  allow_gpr_idx=allow_gpr_idx)
 
 
 def supported_instructions(gpu: str, *, validated_only: bool = False):
-    table = _TABLES[gpu.lower()]
-    out = []
-    for name, (_, validated) in table.items():
-        if validated_only and not validated:
-            continue
-        if lookup(name).gpr_idx_mode:
-            continue
-        out.append(name)
-    return out
+    """Instruction names ``gpu`` implements (timing-model-supported only).
+
+    Raises :class:`UnsupportedInstructionError` for unknown device names —
+    the same contract as :func:`mfma_cycles`.
+    """
+    return _spec(gpu).supported_instructions(validated_only=validated_only)
 
 
 def flops_per_instr(name: str) -> int:
     return lookup(name).flops
+
+
+def _legacy_table(gpu: str) -> Dict[str, Tuple[int, bool]]:
+    return {name: (e.cycles, e.validated)
+            for name, e in _spec(gpu).cycle_table.items()}
+
+
+def __getattr__(name: str):
+    # Backward-compatible views of the timing data that moved to
+    # repro.arch.registry, materialised lazily (PEP 562) so importing this
+    # module never pulls the arch package in at import time.
+    if name == "MI200_CYCLES":
+        return _legacy_table("mi200")
+    if name == "MI300_CYCLES":
+        return _legacy_table("mi300")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -23,9 +23,8 @@ timing probe.
 
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Sequence
+from typing import Dict, Iterable, Optional, Sequence
 
-from repro.core import isa
 from repro.core.machine import MachineModel
 from repro.core.program import (Program, mfma, s_memtime, s_nop, s_waitcnt)
 from repro.core.scoreboard import WFResult, simulate_program
@@ -68,7 +67,7 @@ def measure_latency(machine: MachineModel, instr_name: str, n_mfma: int,
 
 
 def latency_table(machine: MachineModel,
-                  instr_names: Sequence[str] = None,
+                  instr_names: Optional[Sequence[str]] = None,
                   n_range: Iterable[int] = (2, 3, 4, 5)) -> Dict[str, Dict[int, float]]:
     """Reproduces paper Tables III/V (gem5 columns) for ``machine``.
 
@@ -76,7 +75,6 @@ def latency_table(machine: MachineModel,
     the 'Expected' column rather than the KVM-jittered samples.
     """
     if instr_names is None:
-        instr_names = isa.supported_instructions(machine.gpu_table,
-                                                 validated_only=True)
+        instr_names = machine.supported_instructions(validated_only=True)
     return {name: {n: measure_latency(machine, name, n) for n in n_range}
             for name in instr_names}

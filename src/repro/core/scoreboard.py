@@ -38,7 +38,7 @@ import heapq
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.machine import MachineModel
+from repro.core.machine import MachineModel, as_machine
 from repro.core.program import Instr, Wavefront, Workload
 
 __all__ = ["SimResult", "WFResult", "simulate", "simulate_program"]
@@ -107,8 +107,14 @@ def _latency(machine: MachineModel, instr: Instr) -> int:
     raise ValueError(f"unknown opcode {op!r}")
 
 
-def simulate(machine: MachineModel, workload: Workload) -> SimResult:
-    """Run every wavefront to completion; returns per-WF timing + stats."""
+def simulate(machine, workload: Workload) -> SimResult:
+    """Run every wavefront to completion; returns per-WF timing + stats.
+
+    ``machine`` may be a :class:`MachineModel`, a
+    :class:`repro.arch.DeviceSpec`, or a registered device name — any
+    device in the ``repro.arch`` registry simulates without further glue.
+    """
+    machine = as_machine(machine)
     # Per-(cu, simd) MCE availability — the NRDY_MATRIX_CORE counters.
     nrdy_matrix_core: Dict[Tuple[int, int], int] = defaultdict(int)
     mce_busy: Dict[Tuple[int, int], int] = defaultdict(int)

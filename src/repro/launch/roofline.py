@@ -2,16 +2,21 @@
 
 Per (arch x shape) single-pod cell, from the compiled per-device module:
 
-  compute_t    = HLO_FLOPs_dev / peak_FLOPs          (197 TF/s bf16, v5e)
-  memory_t     = HLO_bytes_dev / HBM_bw              (819 GB/s)
-  collective_t = wire_bytes_dev / (links x link_bw)  (~50 GB/s/link ICI;
-                 we charge ONE link — worst-case serialisation — and note
-                 that a 2D-torus all-reduce can stripe over 4)
+  compute_t    = HLO_FLOPs_dev / peak_FLOPs          (spec.peak_flops)
+  memory_t     = HLO_bytes_dev / HBM_bw              (spec.memory.hbm_bw)
+  collective_t = wire_bytes_dev / (links x link_bw)  (spec.interconnect;
+                 ``links`` counts concurrently-driven ring links —
+                 a 2D-torus all-reduce can stripe further)
 
 plus the dominant term, MODEL_FLOPS (6·N·D train / 2·N·D prefill+decode,
 N_active for MoE), and the useful-compute ratio MODEL/HLO.
 
-    python -m repro.launch.roofline --dryrun-dir experiments/dryrun
+Peaks and bandwidths come from the ``repro.arch`` device registry (default
+``tpu_v5e``: 197 bf16 TF/s, 819 GB/s HBM, 2 x 50 GB/s ICI) — any
+registered device rooflines via ``--device``.
+
+    python -m repro.launch.roofline --dryrun-dir experiments/dryrun \
+        [--device tpu_v5p]
 """
 
 from __future__ import annotations
@@ -23,15 +28,10 @@ from typing import Dict, Optional
 
 import jax
 
+from repro.arch import DeviceSpec, get_device
 from repro.configs import SHAPES, get_config
 
-PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e)
-HBM_BW = 819e9             # bytes/s / chip
-LINK_BW = 50e9             # bytes/s / ICI link
-# a bidirectional-ring collective on one torus dimension drives 2 links
-# concurrently (a 2D-torus all-reduce can stripe further; we stay
-# conservative).  The single-link number is LINKS=1.
-LINKS = 2
+_DEFAULT_DEVICE = "tpu_v5e"
 
 __all__ = ["roofline_row", "active_fraction", "main", "load_cells"]
 
@@ -72,7 +72,12 @@ def model_flops(arch: str, shape_name: str, n_params: int) -> float:
     return 2.0 * n_active * shape.global_batch          # decode: 1 token
 
 
-def roofline_row(rec: Dict) -> Optional[Dict]:
+def roofline_row(rec: Dict, spec: Optional[DeviceSpec] = None
+                 ) -> Optional[Dict]:
+    spec = spec or get_device(_DEFAULT_DEVICE)
+    peak_flops = spec.peak_flops_effective
+    hbm_bw = spec.memory.hbm_bw
+    links, link_bw = spec.interconnect.links, spec.interconnect.link_bw
     hlo = rec.get("hlo", {})
     if "flops_per_device" not in hlo:
         return None
@@ -83,10 +88,17 @@ def roofline_row(rec: Dict) -> Optional[Dict]:
     # kernel-adjusted: flash-attention block intermediates are VMEM-resident
     # in the shipped Pallas kernel; the XLA reference materialises them
     b_kernel = b - hlo.get("flash_block_bytes", 0.0)
-    compute_t = f / PEAK_FLOPS
-    memory_t = b_kernel / HBM_BW
-    memory_t_xla = b / HBM_BW
-    coll_t = c / (LINKS * LINK_BW)
+
+    def _t(amount: float, rate: float) -> float:
+        # a spec that omits a bandwidth can't bound traffic it carries
+        if rate <= 0:
+            return 0.0 if amount <= 0 else float("inf")
+        return amount / rate
+
+    compute_t = _t(f, peak_flops)
+    memory_t = _t(b_kernel, hbm_bw)
+    memory_t_xla = _t(b, hbm_bw)
+    coll_t = _t(c, links * link_bw)
     dominant = max(("compute", compute_t), ("memory", memory_t),
                    ("collective", coll_t), key=lambda kv: kv[1])[0]
     mf = model_flops(rec["arch"], rec["shape"], rec["n_params"]) / n_dev
@@ -100,7 +112,7 @@ def roofline_row(rec: Dict) -> Optional[Dict]:
         "useful_ratio": mf / f if f else 0.0,
         # roofline fraction: useful model FLOPs per second at the
         # bottleneck-implied step time, vs peak
-        "roofline_frac": (mf / step_t) / PEAK_FLOPS if step_t else 0.0,
+        "roofline_frac": (mf / step_t) / peak_flops if step_t else 0.0,
         "collectives": hlo.get("collectives", {}),
         "mem_gib": rec.get("memory", {}).get("total_bytes_per_device", 0)
         / 2**30,
@@ -109,11 +121,13 @@ def roofline_row(rec: Dict) -> Optional[Dict]:
     }
 
 
-def load_cells(dryrun_dir: str, mesh: str = "single"):
+def load_cells(dryrun_dir: str, mesh: str = "single",
+               device: str = _DEFAULT_DEVICE):
+    spec = get_device(device)
     rows = []
     for f in sorted(Path(dryrun_dir).glob(f"*_{mesh}.json")):
         rec = json.loads(f.read_text())
-        row = roofline_row(rec)
+        row = roofline_row(rec, spec)
         if row:
             rows.append(row)
     return rows
@@ -138,8 +152,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
     ap.add_argument("--out", default="experiments/roofline.md")
+    ap.add_argument("--device", default=_DEFAULT_DEVICE,
+                    help="device registry name whose peaks/bandwidths "
+                         "anchor the roofline (e.g. tpu_v5e, tpu_v5p)")
     args = ap.parse_args()
-    rows = load_cells(args.dryrun_dir)
+    rows = load_cells(args.dryrun_dir, device=args.device)
     table = _fmt(rows)
     print(table)
     Path(args.out).parent.mkdir(parents=True, exist_ok=True)

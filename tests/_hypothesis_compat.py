@@ -1,0 +1,35 @@
+"""Optional-`hypothesis` shim for the test suite.
+
+The container image does not always ship ``hypothesis``; importing it
+unguarded kills pytest at *collection* (the whole suite dies under ``-x``).
+Importing from this module instead keeps every example-based test running
+and skips only the ``@given`` property tests when the dependency is absent.
+"""
+
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for any `st.*` strategy constructor."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -3,8 +3,8 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-import hypothesis.strategies as st
-from hypothesis import given, settings
+
+from _hypothesis_compat import given, settings, st  # noqa: E402
 
 from repro.kernels import ops, ref
 from repro.models.ssm import ssd_chunked, ssd_step

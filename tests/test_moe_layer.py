@@ -3,8 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import hypothesis.strategies as st
-from hypothesis import given, settings
+import pytest  # noqa: F401
+
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.models.moe import _slot_maps, capacity, init_moe, moe_apply, \

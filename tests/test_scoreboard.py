@@ -1,8 +1,8 @@
 """Scoreboard semantics (paper Section III) + hypothesis properties."""
 
-import hypothesis.strategies as st
-import pytest
-from hypothesis import given, settings
+import pytest  # noqa: F401
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.machine import get_machine
 from repro.core.program import Wavefront, Workload, mfma, s_memtime, v_alu
