@@ -1,0 +1,62 @@
+"""CI perf-trajectory smoke: run the what-if and scoreboard benchmarks on
+a small grid and write a ``BENCH_perf.json`` artifact, so every CI run
+appends a comparable point to the performance history.
+
+    PYTHONPATH=src python benchmarks/perf_smoke.py [--out BENCH_perf.json]
+
+The artifact records each benchmark row (name, us_per_call, derived) plus
+the parse-cache counters — a regression that re-parses modules per
+estimator shows up as ``cache.parses`` climbing above the workload count.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import platform
+import sys
+import time
+from pathlib import Path
+
+# runnable both as `python benchmarks/perf_smoke.py` and `-m benchmarks...`
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_perf.json")
+    args = ap.parse_args()
+
+    from benchmarks import scoreboard_bench, whatif_workloads
+    from repro.perf import cache_stats, clear_cache
+
+    clear_cache()
+    results = {}
+    wall = {}
+    for name, mod in (("whatif_workloads", whatif_workloads),
+                      ("scoreboard_bench", scoreboard_bench)):
+        t0 = time.perf_counter()
+        rows = mod.main(small=True)
+        wall[name] = round(time.perf_counter() - t0, 3)
+        results[name] = [
+            {"name": n, "us_per_call": round(float(us), 3), "derived": d}
+            for n, us, d in rows]
+
+    payload = {
+        "schema": "bench_perf/v1",
+        "python": platform.python_version(),
+        "wall_s": wall,
+        "cache": dataclasses.asdict(cache_stats()),
+        "results": results,
+    }
+    Path(args.out).write_text(json.dumps(payload, indent=1))
+    n_rows = sum(len(v) for v in results.values())
+    print(f"[perf_smoke] {n_rows} rows -> {args.out} "
+          f"(cache parses={payload['cache']['parses']}, "
+          f"hits={payload['cache']['hits']})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

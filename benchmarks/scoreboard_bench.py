@@ -1,20 +1,26 @@
 """Scoreboard-simulator throughput study (supports paper Section III's
 occupancy discussion): MCE utilisation vs wavefront occupancy per CU, and
-simulator wall-time per simulated instruction."""
+simulator wall-time per simulated instruction.
+
+The tile-loop builder/simulator is the unified pipeline's home
+(``repro.perf.engines``) — the same stream the ``ScoreboardEngine``
+extrapolates whole workloads from."""
 
 from __future__ import annotations
 
+import sys
 import time
 
-from repro.core.hlo_bridge import simulate_gemm_cu
 from repro.core.machine import get_machine
+from repro.perf.engines import simulate_gemm_cu
 
 
-def main():
+def main(small: bool = False):
     rows = []
+    occupancies = (1, 4) if small else (1, 2, 4, 8, 16)
     for gpu in ("mi200", "mi300"):
         m = get_machine(gpu)
-        for n_wf in (1, 2, 4, 8, 16):
+        for n_wf in occupancies:
             t0 = time.perf_counter()
             r = simulate_gemm_cu(m, "fp32_16x16x4fp32", tiles_per_wf=32,
                                  n_wf=n_wf)
@@ -27,5 +33,5 @@ def main():
 
 
 if __name__ == "__main__":
-    for r in main():
+    for r in main(small="--small" in sys.argv):
         print(",".join(str(x) for x in r))

@@ -1,8 +1,9 @@
 """Framework-scale what-if (the paper's Section V-B payoff): decompose the
-compiled smoke-scale train/decode steps of assigned architectures into MFMA
+compiled smoke-scale train steps of assigned architectures into MFMA
 streams and predict matrix-unit-bound time on EVERY device in the
 ``repro.arch`` registry (MI200/MI300/MI300X, TPU v5e/v5p), under
-``mfma_scale`` overlays in {1, 2}.
+``mfma_scale`` overlays in {1, 2} — one ``repro.perf.sweep`` call over the
+unified pipeline, each module parsed exactly once.
 
 This is the gem5-for-PyTorch story at static-analysis speed: the same HLO
 the dry-run validates is re-costed against each device's capability spec.
@@ -16,6 +17,7 @@ import os
 # not the CPU-execution f32 upcast (see repro.models.layers.mm)
 os.environ.setdefault("REPRO_CPU_F32_DOTS", "0")
 
+import sys
 import time
 
 import jax
@@ -23,14 +25,13 @@ import jax.numpy as jnp
 
 from repro.arch import Overlay, list_devices
 from repro.configs import get_config
-from repro.core.hlo_analysis import analyze
-from repro.core.hlo_bridge import predict_dots
-from repro.core.machine import get_machine
 from repro.models import init_params
 from repro.models.model import loss_fn
+from repro.perf import parse_cached, sweep
 
 ARCHS = ["qwen2-7b", "mamba2-370m", "deepseek-v2-lite-16b",
          "qwen3-moe-235b-a22b"]
+ARCHS_SMALL = ["qwen2-7b"]            # CI smoke grid
 
 
 def _compiled_text(arch):
@@ -49,25 +50,25 @@ def _compiled_text(arch):
     return fn.lower(params, batch).compile().as_text()
 
 
-def main():
+def main(small: bool = False):
     rows = []
-    for arch in ARCHS:
+    for arch in (ARCHS_SMALL if small else ARCHS):
         t0 = time.perf_counter()
-        txt = _compiled_text(arch)
-        stats = analyze(txt)
+        graph = parse_cached(_compiled_text(arch))
         dt = (time.perf_counter() - t0) * 1e6
-        for machine_name in list_devices():
-            for scale in (1.0, 2.0):
-                m = get_machine(machine_name,
-                                overlay=Overlay(mfma_scale=scale))
-                pred = predict_dots(m, stats.dots)
-                rows.append((
-                    f"whatif/{arch}/{machine_name}/x{scale:g}", dt,
-                    f"mfma={pred.total_mfma} mce_us={pred.mce_time_s * 1e6:.1f} "
-                    f"mix={len(pred.instr_mix)}kinds"))
+        reports = sweep({arch: graph}, devices=list(list_devices()),
+                        engines=("mfma",),
+                        overlays=[Overlay(mfma_scale=s) for s in (1.0, 2.0)])
+        for r in reports:
+            scale = r.metrics["mfma_scale"]
+            rows.append((
+                f"whatif/{arch}/{r.device}/x{scale:g}", dt,
+                f"mfma={r.metrics['total_mfma']} "
+                f"mce_us={r.total_time_s * 1e6:.1f} "
+                f"mix={len(r.metrics['instr_mix'])}kinds"))
     return rows
 
 
 if __name__ == "__main__":
-    for r in main():
+    for r in main(small="--small" in sys.argv):
         print(",".join(str(x) for x in r))

@@ -1,5 +1,6 @@
 """Quickstart: build a reduced assigned-architecture LM, train a few steps
-on the synthetic stream, generate tokens.
+on the synthetic stream, generate tokens — then cost the compiled step on
+real accelerators with the unified ``repro.perf.predict`` API.
 
     PYTHONPATH=src python examples/quickstart.py [--arch qwen2-7b]
 """
@@ -46,6 +47,27 @@ def main():
     out = eng.generate(prompt, n_steps=12)
     print("prompt :", prompt[0, -8:].tolist())
     print("decoded:", out.tokens[0].tolist())
+
+    # The unified performance pipeline: cost THIS model's compiled train
+    # step on real accelerators — one predict() call per question.
+    from repro.arch import Overlay
+    from repro.models.model import loss_fn
+    from repro.perf import predict
+
+    batch_spec = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+    txt = jax.jit(lambda p, b: loss_fn(cfg, p, b)).lower(
+        params, batch_spec).compile().as_text()
+    print("\nwhat-if: one train step, unified repro.perf predict()")
+    for device, engine in (("mi300", "mfma"), ("mi300", "scoreboard"),
+                           ("tpu_v5e", "roofline")):
+        r = predict(txt, device=device, engine=engine)
+        print(f"  {device:8s} {engine:10s} {r.total_time_s * 1e6:9.1f}us "
+              f"({r.bound}-bound)")
+    r2 = predict(txt, device="mi300", engine="mfma",
+                 overlays=Overlay(mfma_scale=0.5, label="2x faster MCE"))
+    print(f"  {'mi300':8s} {'mfma':10s} {r2.total_time_s * 1e6:9.1f}us "
+          f"under scenario [{r2.scenario}]")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,9 @@
 """MCE what-if analysis at framework scale (paper Section V-B, beyond the
 microbenchmarks): sweep --mfma-scale over a REAL workload's compiled HLO
-and report the matrix-unit-bound time for every device in the
-``repro.arch`` registry, plus a composed overlay-grid scenario sweep
-(MFMA x clock) on one device.
+through the unified ``repro.perf`` pipeline — every device in the
+``repro.arch`` registry, a composed overlay-grid scenario sweep
+(MFMA x clock), and all three cost engines (roofline / analytic MFMA /
+event-driven scoreboard) answering from the same parsed KernelGraph.
 
 Demonstrates the paper's headline use-case: "how would a 2x-faster (or
 slower) matrix core change my workload?" — answered from the same compiled
@@ -21,13 +22,11 @@ os.environ.setdefault("REPRO_CPU_F32_DOTS", "0")
 import jax
 import jax.numpy as jnp
 
-from repro.arch import overlay_grid, list_devices
+from repro.arch import Overlay, list_devices, overlay_grid
 from repro.configs import ARCHS, get_config
-from repro.core.hlo_analysis import analyze
-from repro.core.hlo_bridge import predict_dots
-from repro.core.machine import get_machine
 from repro.models import init_params
 from repro.models.model import loss_fn
+from repro.perf import parse_cached, predict, sweep, format_reports
 
 
 def main():
@@ -65,28 +64,33 @@ def main():
 
     txt = jax.jit(lambda p, b: loss_fn(cfg, p, b)).lower(
         params, batch).compile().as_text()
-    stats = analyze(txt)
+    # parse ONCE; every sweep below reuses this KernelGraph via the cache
+    graph = parse_cached(txt)
     print(f"{args.arch} (reduced) train step: "
-          f"{stats.flops / 1e9:.2f} GFLOP, {len(stats.dots)} dot sites")
+          f"{graph.flops / 1e9:.2f} GFLOP, {len(graph.dots)} dot sites")
 
     print(f"\n{'machine':10s} " + " ".join(f"x{s:<8g}" for s in scales)
           + "  (matrix-unit-bound us)")
     for name in devices:
-        row = []
-        for s in scales:
-            pred = predict_dots(get_machine(name, mfma_scale=s), stats.dots)
-            row.append(f"{pred.mce_time_s * 1e6:<9.1f}")
-        print(f"{name:10s} " + " ".join(row))
+        reports = predict(graph, device=name, engine="mfma",
+                          overlays=[Overlay(mfma_scale=s) for s in scales])
+        print(f"{name:10s} " + " ".join(
+            f"{r.total_time_s * 1e6:<9.1f}" for r in reports))
 
     # Composed scenarios: the overlay grid sweeps MFMA latency AND clock
     # together — one grid cell per (mfma_scale, clock_scale) pair.
     print(f"\noverlay grid on {args.grid_device} "
           "(scenario: matrix-unit-bound us)")
-    base = get_machine(args.grid_device)
-    for ov in overlay_grid(mfma_scale=(0.5, 1.0, 2.0),
-                           clock_scale=(1.0, 1.2)):
-        pred = predict_dots(base.with_overlay(ov), stats.dots)
-        print(f"  {ov.describe():24s} {pred.mce_time_s * 1e6:.1f}")
+    for r in predict(graph, device=args.grid_device, engine="mfma",
+                     overlays=overlay_grid(mfma_scale=(0.5, 1.0, 2.0),
+                                           clock_scale=(1.0, 1.2))):
+        print(f"  {r.scenario:24s} {r.total_time_s * 1e6:.1f}")
+
+    # All three engines, one graph, one shared Report schema.
+    print("\nengine comparison (same KernelGraph, baseline scenario)")
+    print(format_reports(sweep({args.arch: graph},
+                               devices=[args.grid_device],
+                               engines=("roofline", "mfma", "scoreboard"))))
     print("\nNOTE (paper Section VI): on real code the end-to-end speedup "
           "is sub-linear in mfma-scale — compiler-scheduled independent "
           "work between MFMAs is fixed at compile time.")

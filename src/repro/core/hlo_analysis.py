@@ -1,56 +1,23 @@
-"""Loop-aware cost analysis over compiled HLO text.
+"""Loop-aware cost analysis — compatibility shim over ``repro.perf.hlo_ir``.
 
 Why this exists: XLA:CPU's ``compiled.cost_analysis()`` counts each op ONCE
 even inside ``while`` loops — a scanned 60-layer transformer reports 1/60th
-of its FLOPs.  Since the dry-run relies on scan-over-layers to keep compile
-times sane, we re-derive the roofline inputs from ``compiled.as_text()``
-with explicit trip-count multipliers:
-
-* computations reachable from ENTRY via ``while(body=..., condition=...)``
-  accumulate ``multiplier = parent_multiplier * trip_count`` (trip count from
-  the ``known_trip_count`` backend config, falling back to the condition's
-  ``compare(..., constant(N), direction=LT)``);
-* per executed computation we account:
-    - **flops**: ``dot`` ops as 2*B*M*N*K (operand shapes resolved through a
-      module-wide symbol table; XLA:CPU keeps dots un-fused);
-    - **bytes**: for every materialising op, result bytes + operand bytes
-      (fusions therefore count their true kernel-boundary traffic);
-    - **collectives**: result bytes + ring-model wire bytes per kind.
-
-Cross-check: on while-free modules, totals match ``cost_analysis()`` closely
-(tests assert this).
+of its FLOPs.  The trip-count-aware parser that fixes this now lives in
+:func:`repro.perf.hlo_ir.parse_module` (one parser for the whole
+performance stack); this module keeps the legacy :class:`HLOStats` result
+shape for existing call sites.  New code should use
+``repro.perf.parse_cached`` / ``repro.perf.predict`` directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import re
-from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
-from repro.core.hlo_bridge import (DotOp, _BYTES, _mnk, _parse_int_list,
-                                   _DIMS_RE, _GROUPS_RE, _GROUPS_LIST_RE)
+from repro.core.hlo_bridge import DotOp
+from repro.perf.hlo_ir import parse_module
 
 __all__ = ["HLOStats", "analyze"]
-
-# note: parameter lists may contain nested parens (tuple params), so match
-# loosely: name, open-paren, anything, '->', anything, trailing '{'
-_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*->.*\{\s*$")
-_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
-_RESULT_SHAPES_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_OPCODE_RE = re.compile(r"^(?:\(([^)]*)\)|(\w+)\[[\d,]*\][^\s]*)\s+([\w\-]+)\(")
-_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
-_WHILE_ATTR_RE = re.compile(r"condition=(%[\w.\-]+),\s*body=(%[\w.\-]+)")
-_CONST_RE = re.compile(r"(%[\w.\-]+)\s*=\s*\w+\[\]\s*constant\((\d+)\)")
-_DOT_ATTR_RE = _DIMS_RE
-
-# ops that don't touch memory / are name-plumbing only
-_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
-             "after-all", "add-dependency", "partition-id", "replica-id",
-             "iota"}
-
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute", "ragged-all-to-all")
 
 
 @dataclasses.dataclass
@@ -71,243 +38,14 @@ class HLOStats:
         return sum(v["wire_bytes"] for v in self.collectives.values())
 
 
-def _shape_bytes(dtype: str, dims: List[int]) -> float:
-    if dtype not in _BYTES:
-        return 0.0
-    size = 1
-    for d in dims:
-        size *= d
-    return float(size * _BYTES[dtype])
-
-
-def _split_computations(text: str) -> Dict[str, List[str]]:
-    comps: Dict[str, List[str]] = {}
-    cur: Optional[str] = None
-    entry_alias = None
-    for line in text.splitlines():
-        m = _COMP_HDR_RE.match(line)
-        if m and line.rstrip().endswith("{"):
-            cur = m.group(1)
-            comps[cur] = []
-            if line.lstrip().startswith("ENTRY"):
-                entry_alias = cur
-            continue
-        if cur is not None:
-            if line.strip() == "}":
-                cur = None
-            else:
-                comps[cur].append(line)
-    if entry_alias is not None:
-        comps["__entry__"] = comps[entry_alias]
-    return comps
-
-
-def _symbol_table(text: str) -> Dict[str, Tuple[str, List[int]]]:
-    sym: Dict[str, Tuple[str, List[int]]] = {}
-    for line in text.splitlines():
-        m = _OP_RE.match(line)
-        if not m:
-            continue
-        name, rhs = m.groups()
-        sm = _RESULT_SHAPES_RE.search(rhs)
-        if sm:
-            sym[name] = (sm.group(1), _parse_int_list(sm.group(2)))
-    return sym
-
-
-def _opcode_of(rhs: str) -> Optional[str]:
-    """Opcode from an op right-hand side like 'f32[8]{0} fusion(...)'."""
-    m = re.match(r"^(?:\([^=]*?\)|[\w\[\]{},:#\*]+)\s+([\w\-]+)", rhs)
-    return m.group(1) if m else None
-
-
-def _operand_names(rhs: str) -> List[str]:
-    lp = rhs.find("(")
-    if lp < 0:
-        return []
-    depth, end = 0, -1
-    for i in range(lp, len(rhs)):
-        if rhs[i] == "(":
-            depth += 1
-        elif rhs[i] == ")":
-            depth -= 1
-            if depth == 0:
-                end = i
-                break
-    if end < 0:
-        return []
-    inner = rhs[lp + 1:end]
-    return re.findall(r"%[\w.\-]+", inner)
-
-
-def _trip_count(line: str, cond_name: str,
-                comps: Dict[str, List[str]]) -> float:
-    m = _TRIP_RE.search(line)
-    if m:
-        return float(m.group(1))
-    # fallback: condition compares induction var with constant, direction=LT
-    consts = {}
-    for cl in comps.get(cond_name, []):
-        cm = _CONST_RE.search(cl)
-        if cm:
-            consts[cm.group(1)] = int(cm.group(2))
-    for cl in comps.get(cond_name, []):
-        if "compare(" in cl and "direction=LT" in cl:
-            for name in _operand_names(cl.split("=", 1)[1]):
-                if name in consts:
-                    return float(consts[name])
-    return 1.0
-
-
-def _wire_bytes(kind: str, nbytes: float, g: int) -> float:
-    if kind == "all-gather":
-        return nbytes * (g - 1) / g
-    if kind == "reduce-scatter":
-        return nbytes * (g - 1)
-    if kind == "all-reduce":
-        return 2.0 * nbytes * (g - 1) / g
-    if kind in ("all-to-all", "ragged-all-to-all"):
-        return nbytes * (g - 1) / g
-    return nbytes  # collective-permute: one hop
-
-
-def _convert_sources(text: str,
-                     sym: Dict[str, Tuple[str, List[int]]]) -> Dict[str, str]:
-    """name -> source dtype for every ``convert`` op (used to charge
-    XLA:CPU's bf16->f32 dot-legalisation converts at bf16 width: those
-    converts don't exist on TPU, whose MXU consumes bf16 natively)."""
-    out = {}
-    for line in text.splitlines():
-        m = _OP_RE.match(line)
-        if not m:
-            continue
-        name, rhs = m.groups()
-        if not re.match(r"^\S+\s+convert\(", rhs):
-            continue
-        ops = re.findall(r"%[\w.\-]+", rhs[rhs.find("("):])
-        if ops and ops[0] in sym:
-            out[name] = sym[ops[0]][0]
-    return out
-
-
 def analyze(text: str, *, tpu_correct: bool = True) -> HLOStats:
-    comps = _split_computations(text)
-    sym = _symbol_table(text)
-    cvt_src = _convert_sources(text, sym) if tpu_correct else {}
-
-    def shape_bytes_of(name: str) -> float:
-        if name not in sym:
-            return 0.0
-        dt, dims = sym[name]
-        if tpu_correct and dt == "f32" and cvt_src.get(name) == "bf16":
-            dt = "bf16"           # TPU keeps the native bf16 operand
-        return _shape_bytes(dt, dims)
-
-    # 1. multipliers: walk from entry through while ops
-    mult: Dict[str, float] = defaultdict(float)
-    if "__entry__" not in comps:
-        raise ValueError("no ENTRY computation found in HLO text")
-    entry_lines = comps["__entry__"]
-    # identify the actual entry computation name to avoid double count
-    entry_names = [n for n, ls in comps.items() if ls is entry_lines]
-    real_entry = [n for n in entry_names if n != "__entry__"][0]
-    mult[real_entry] = 1.0
-    frontier = [real_entry]
-    seen_while_in: Dict[str, bool] = {}
-    while frontier:
-        cname = frontier.pop()
-        cmult = mult[cname]
-        for line in comps.get(cname, []):
-            if " while(" not in line:
-                continue
-            wm = _WHILE_ATTR_RE.search(line)
-            if not wm:
-                continue
-            cond, body = wm.group(1), wm.group(2)
-            trips = _trip_count(line, cond, comps)
-            for sub, m_extra in ((body, trips), (cond, trips + 1)):
-                if sub in comps:
-                    mult[sub] += cmult * m_extra
-                    frontier.append(sub)
-
-    # 2. executed computations = those with a multiplier (fusion-called
-    #    computations are charged at their call site, not walked).
-    flops = 0.0
-    nbytes = 0.0
-    flash_bytes = 0.0
-    by_opcode: Dict[str, float] = defaultdict(float)
-    dots: List[Tuple[DotOp, float]] = []
-    colls: Dict[str, Dict[str, float]] = defaultdict(
-        lambda: {"count": 0.0, "result_bytes": 0.0, "wire_bytes": 0.0})
-
-    for cname, cmult in list(mult.items()):
-        if cmult <= 0:
-            continue
-        for line in comps.get(cname, []):
-            m = _OP_RE.match(line)
-            if not m:
-                continue
-            name, rhs = m.groups()
-            opcode = _opcode_of(rhs)
-            if opcode is None or opcode in _FREE_OPS:
-                continue
-            if tpu_correct and opcode == "convert" \
-                    and cvt_src.get(name) == "bf16":
-                continue  # CPU dot-legalisation artifact: free on TPU
-            # --- bytes: result + operands (kernel-boundary traffic) ---
-            line_bytes = shape_bytes_of(name)
-            for opn in _operand_names(rhs):
-                line_bytes += shape_bytes_of(opn)
-            nbytes += cmult * line_bytes
-            by_opcode[opcode] += cmult * line_bytes
-            if opcode in ("fusion", "dot"):
-                rdt, rdims = sym.get(name, ("", []))
-                if len(rdims) >= 3 and rdims[-1] == 512 and rdims[-2] >= 128:
-                    flash_bytes += cmult * line_bytes
-
-            # --- dot flops ---
-            if opcode == "dot":
-                attrs = rhs.split(")", 1)[1] if ")" in rhs else ""
-                dims = {k: _parse_int_list(rx.search(attrs).group(1))
-                        if rx.search(attrs) else []
-                        for k, rx in _DOT_ATTR_RE.items()}
-                opnames = _operand_names(rhs)
-                if len(opnames) >= 2 and opnames[0] in sym and opnames[1] in sym:
-                    (ldt, ldims), (_, rdims2) = sym[opnames[0]], sym[opnames[1]]
-                    b, mm, nn, kk = _mnk(ldims, rdims2, dims["lhs_b"],
-                                         dims["lhs_c"], dims["rhs_b"],
-                                         dims["rhs_c"])
-                    dot = DotOp(in_dtype=ldt, batch=b, m=mm, n=nn, k=kk)
-                    dots.append((dot, cmult))
-                    flops += cmult * dot.flops
-
-            # --- collectives ---
-            for kind in _COLLECTIVES:
-                if opcode == kind or opcode == kind + "-start":
-                    g = 1
-                    gm = _GROUPS_RE.search(line)
-                    if gm:
-                        g = int(gm.group(2))
-                    else:
-                        gl = _GROUPS_LIST_RE.search(line)
-                        if gl:
-                            g = len([x for x in gl.group(1).split(",")
-                                     if x.strip()])
-                    # result shape: last tensor in the (possibly tuple) result
-                    shapes = _RESULT_SHAPES_RE.findall(rhs.split(opcode)[0])
-                    if shapes:
-                        cdt, cdims = shapes[-1]
-                        cb = _shape_bytes(cdt, _parse_int_list(cdims))
-                        ops_n = _operand_names(rhs)
-                        if tpu_correct and cdt == "f32" and ops_n and \
-                                cvt_src.get(ops_n[0]) == "bf16":
-                            cb /= 2  # TPU moves the bf16 tensor, not f32
-                        st = colls[kind]
-                        st["count"] += cmult
-                        st["result_bytes"] += cmult * cb
-                        st["wire_bytes"] += cmult * _wire_bytes(kind, cb, max(1, g))
-                    break
-
-    return HLOStats(flops=flops, bytes_accessed=nbytes, dots=dots,
-                    collectives=dict(colls), bytes_by_opcode=dict(by_opcode),
-                    flash_block_bytes=flash_bytes)
+    """Legacy view of :func:`repro.perf.hlo_ir.parse_module`."""
+    g = parse_module(text, tpu_correct=tpu_correct)
+    return HLOStats(
+        flops=g.flops,
+        bytes_accessed=g.bytes_accessed,
+        dots=[(op.as_dot(), cnt) for op, cnt in g.dot_pairs()],
+        collectives=g.collectives,
+        bytes_by_opcode=dict(g.bytes_by_opcode),
+        flash_block_bytes=g.flash_block_bytes,
+    )

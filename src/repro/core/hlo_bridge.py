@@ -1,282 +1,61 @@
-"""Compiled-HLO -> MFMA instruction accounting -> predicted kernel time.
+"""Compiled-HLO -> MFMA accounting — compatibility shim over ``repro.perf``.
 
-This is the framework-scale payoff of the paper's contribution: given a
-*compiled* JAX program (the dry-run artifact of any architecture in
-``repro.configs``), decompose every ``dot`` into the MFMA instructions an
-MI200/MI300 MCE would execute — or MXU passes on the TPU model — and predict
-the matrix-unit-bound execution time, including under ``--mfma-scale``
-what-ifs.  The analogue of running PyTorch/TF workloads over gem5's new MCE
-support, at the speed of static analysis.
-
-Two accounting layers:
-
-* **Analytic** (`predict`): throughput model — each MCE retires one MFMA per
-  ``mfma_cycles`` (no intra-WF pipelining, full cross-WF/SIMD parallelism,
-  the paper's issue semantics in closed form).  Scales to billion-FLOP HLO.
-* **Simulated** (`gemm_stream` + scoreboard): a representative tile loop run
-  through the event-driven model to validate the analytic throughput
-  assumption (tests assert they agree).
-
-Parsing is regex-based over ``compiled.as_text()``; dots inside ``while``
-bodies (scan layers) appear once, so we renormalise instruction counts by
-``cost_analysis()['flops']`` — the compiler's ground truth for total work.
+This module used to own the HLO text parsing and the closed-form MCE
+throughput model; both now live in the unified performance pipeline
+(:mod:`repro.perf.hlo_ir` for parsing, :mod:`repro.perf.engines` for
+costing) where the roofline, scoreboard and what-if sweeps share them.
+The legacy API is preserved exactly — same functions, same result shapes,
+same numbers (``tests/test_perf_engines.py`` asserts engine/legacy parity)
+— so existing call sites and notebooks keep working.  New code should call
+``repro.perf.predict`` instead.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
-import re
-from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.arch import select as arch_select
-from repro.core import isa
 from repro.core.machine import MachineModel, as_machine
-from repro.core.program import Program, Wavefront, Workload, mfma
-from repro.core.scoreboard import simulate
+from repro.perf import hlo_ir
+from repro.perf.engines import (best_instr, cost_dot_pairs,  # noqa: F401
+                                gemm_stream, mfma_count, simulate_gemm_cu)
+from repro.perf.hlo_ir import DotOp  # noqa: F401  (legacy re-export)
 
 __all__ = ["DotOp", "parse_dots", "parse_collectives", "best_instr",
-           "mfma_count", "predict", "Prediction", "gemm_stream",
-           "simulate_gemm_cu", "collective_bytes_total"]
+           "mfma_count", "predict", "predict_dots", "Prediction",
+           "gemm_stream", "simulate_gemm_cu", "collective_bytes_total"]
 
-_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-          "s32": 4, "u32": 4, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-          "s64": 8, "u64": 8, "pred": 1, "s4": 1, "u4": 1}
-
-# HLO dtype -> MFMA operand dtype mapping is a device-layer policy now:
-_DTYPE_TO_IN = arch_select.HLO_DTYPE_TO_IN
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_DEF_RE = re.compile(r"(%[\w.\-]+)\s*=\s*(\w+)\[([\d,]*)\]")
-_DOT_RE = re.compile(
-    r"=\s*(\w+)\[([\d,]*)\][^\s]*\s+dot\(([^)]*)\)\s*,\s*(.*)")
-_DIMS_RE = {
-    "lhs_b": re.compile(r"lhs_batch_dims=\{([\d,]*)\}"),
-    "rhs_b": re.compile(r"rhs_batch_dims=\{([\d,]*)\}"),
-    "lhs_c": re.compile(r"lhs_contracting_dims=\{([\d,]*)\}"),
-    "rhs_c": re.compile(r"rhs_contracting_dims=\{([\d,]*)\}"),
-}
-_COLL_RE = re.compile(
-    r"\s(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(-start)?\(")
-_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
-# StableHLO (lowered, pre-partitioning) forms:
-_SH_DOT_RE = re.compile(
-    r"stablehlo\.dot_general\s+[^:]*?"
-    r"(?:batching_dims\s*=\s*\[([\d, ]*)\]\s*x\s*\[[\d, ]*\]\s*,\s*)?"
-    r"contracting_dims\s*=\s*\[([\d, ]*)\]\s*x\s*\[([\d, ]*)\][^:]*:\s*"
-    r"\(tensor<([^>]+)>,\s*tensor<([^>]+)>\)")
-_SH_CONV_RE = re.compile(r"stablehlo\.convolution")
-
-
-@dataclasses.dataclass(frozen=True)
-class DotOp:
-    in_dtype: str          # HLO dtype of operands ("bf16", "f32", ...)
-    batch: int
-    m: int
-    n: int
-    k: int
-
-    @property
-    def macs(self) -> int:
-        return self.batch * self.m * self.n * self.k
-
-    @property
-    def flops(self) -> int:
-        return 2 * self.macs
-
-
-def _parse_int_list(s: str) -> List[int]:
-    s = s.strip()
-    return [int(x) for x in s.split(",")] if s else []
-
-
-def _tensor_sig(sig: str) -> Tuple[str, List[int]]:
-    """'256x1024xbf16' -> ('bf16', [256, 1024]); '8xf32' -> ('f32', [8])."""
-    parts = sig.split("x")
-    dims, dtype = [], parts[-1]
-    for p in parts[:-1]:
-        dims.append(int(p))
-    return dtype, dims
-
-
-def _mnk(ldims, rdims, lhs_b, lhs_c, rhs_b, rhs_c) -> Tuple[int, int, int, int]:
-    batch = 1
-    for d in lhs_b:
-        batch *= ldims[d]
-    k_total = 1
-    for d in lhs_c:
-        k_total *= ldims[d]
-    m_total = 1
-    for i, d in enumerate(ldims):
-        if i not in lhs_b and i not in lhs_c:
-            m_total *= d
-    n_total = 1
-    for i, d in enumerate(rdims):
-        if i not in rhs_b and i not in rhs_c:
-            n_total *= d
-    return batch, m_total, n_total, k_total
-
-
-def _parse_stablehlo_dots(text: str) -> List[DotOp]:
-    out: List[DotOp] = []
-    for m in _SH_DOT_RE.finditer(text):
-        bdims_s, lc_s, rc_s, lsig, rsig = m.groups()
-        ldt, ldims = _tensor_sig(lsig)
-        rdt, rdims = _tensor_sig(rsig)
-        lhs_b = _parse_int_list((bdims_s or "").replace(" ", ""))
-        # batching dims are leading & symmetric in stablehlo's pretty form
-        rhs_b = list(lhs_b)
-        lhs_c = _parse_int_list(lc_s.replace(" ", ""))
-        rhs_c = _parse_int_list(rc_s.replace(" ", ""))
-        b, mm, nn, kk = _mnk(ldims, rdims, lhs_b, lhs_c, rhs_b, rhs_c)
-        out.append(DotOp(in_dtype=ldt, batch=b, m=mm, n=nn, k=kk))
-    return out
-
-
-def _parse_hlo_dots(text: str) -> List[DotOp]:
-    # symbol table: %name -> (dtype, dims) for operand resolution
-    sym: Dict[str, Tuple[str, List[int]]] = {}
-    for m in _DEF_RE.finditer(text):
-        sym[m.group(1)] = (m.group(2), _parse_int_list(m.group(3)))
-    out: List[DotOp] = []
-    for line in text.splitlines():
-        if " dot(" not in line:
-            continue
-        m = _DOT_RE.search(line)
-        if not m:
-            continue
-        odt, odims_s, operands, attrs = m.groups()
-        odims = _parse_int_list(odims_s)
-        dims = {k: _parse_int_list(rx.search(attrs).group(1))
-                if rx.search(attrs) else [] for k, rx in _DIMS_RE.items()}
-        # operands: either inline-shaped or bare %names
-        inline = _SHAPE_RE.findall(operands)
-        names = [t.strip().split(" ")[-1] for t in operands.split(",")]
-        if len(inline) >= 2:
-            (ldt, ls), (rdt, rs) = inline[0], inline[1]
-            ldims, rdims = _parse_int_list(ls), _parse_int_list(rs)
-        elif len(names) >= 2 and names[0] in sym and names[1] in sym:
-            (ldt, ldims), (rdt, rdims) = sym[names[0]], sym[names[1]]
-        else:
-            # fall back: derive M,N from output; K unknown -> skip
-            continue
-        b, mm, nn, kk = _mnk(ldims, rdims, dims["lhs_b"], dims["lhs_c"],
-                             dims["rhs_b"], dims["rhs_c"])
-        out.append(DotOp(in_dtype=ldt, batch=b, m=mm, n=nn, k=kk))
-    return out
+# Legacy aliases (hlo_analysis and external notebooks imported these):
+_BYTES = hlo_ir.BYTES_PER_ELEM
+_mnk = hlo_ir._mnk
+_parse_int_list = hlo_ir._parse_int_list
+_DIMS_RE = hlo_ir.DIMS_RE
+_GROUPS_RE = hlo_ir.GROUPS_RE
+_GROUPS_LIST_RE = hlo_ir.GROUPS_LIST_RE
+_SHAPE_RE = hlo_ir.SHAPE_RE
 
 
 def parse_dots(text: str) -> List[DotOp]:
     """Extract every dot op (each counted once, even inside while bodies).
 
-    Accepts StableHLO (``lowered.as_text()`` — preserves bf16 operand types,
-    global shapes) or post-SPMD HLO (``compiled.as_text()`` — per-device
-    shapes; XLA:CPU upcasts bf16 dots to f32, a backend artifact).
+    Accepts StableHLO (``lowered.as_text()``) or post-SPMD HLO
+    (``compiled.as_text()``).  Thin wrapper over
+    :func:`repro.perf.hlo_ir.parse_static_dots`.
     """
-    if "stablehlo.dot_general" in text:
-        return _parse_stablehlo_dots(text)
-    return _parse_hlo_dots(text)
-
-
-def _group_size(line: str) -> int:
-    m = _GROUPS_RE.search(line)          # replica_groups=[G,S]<=[N]
-    if m:
-        return int(m.group(2))
-    m = _GROUPS_LIST_RE.search(line)     # replica_groups={{0,1,2,3},...}
-    if m:
-        return len([x for x in m.group(1).split(",") if x.strip()])
-    return 1
+    return [op.as_dot() for op in hlo_ir.parse_static_dots(text)]
 
 
 def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
-    """Per-collective-kind stats from post-SPMD HLO text.
-
-    For each collective op we take the *result* shape printed on its line
-    (per-device) plus the replica-group size, and derive ``wire_bytes`` —
-    bytes a device moves over links, using ring-algorithm accounting:
-
-      all-gather:         result * (g-1)/g      (receives all other shards)
-      reduce-scatter:     result * (g-1)        (operand = result*g)
-      all-reduce:         2 * result * (g-1)/g  (RS + AG phases)
-      all-to-all:         result * (g-1)/g
-      collective-permute: result                (one hop)
-
-    Returns {kind: {count, result_bytes, wire_bytes}}.
-    """
-    stats: Dict[str, Dict[str, float]] = defaultdict(
-        lambda: {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0})
-    for line in hlo_text.splitlines():
-        m = _COLL_RE.search(line)
-        if not m:
-            continue
-        kind, start = m.group(1), m.group(2)
-        if f"{kind}-done" in line:
-            continue  # async completion: payload counted at -start
-        head = line.split(f" {kind}", 1)[0]
-        shapes = _SHAPE_RE.findall(head)
-        if not shapes:
-            continue
-        # async -start results are tuples (operand, result, ...): take last
-        dt, dims_s = shapes[-1]
-        if dt not in _BYTES:
-            continue
-        size = 1
-        for d in _parse_int_list(dims_s):
-            size *= d
-        nbytes = float(size * _BYTES[dt])
-        g = max(1, _group_size(line))
-        if kind == "all-gather":
-            wire = nbytes * (g - 1) / g
-        elif kind == "reduce-scatter":
-            wire = nbytes * (g - 1)
-        elif kind == "all-reduce":
-            wire = 2.0 * nbytes * (g - 1) / g
-        elif kind == "all-to-all":
-            wire = nbytes * (g - 1) / g
-        else:  # collective-permute
-            wire = nbytes
-        st = stats[kind]
-        st["count"] += 1
-        st["result_bytes"] += nbytes
-        st["wire_bytes"] += wire
-    return dict(stats)
+    """Per-collective-kind stats from post-SPMD HLO text (each op counted
+    once).  Returns {kind: {count, result_bytes, wire_bytes}} — see
+    :func:`repro.perf.hlo_ir.parse_collectives_static` for the ring-model
+    wire-byte accounting."""
+    return hlo_ir.parse_collectives_static(hlo_text)
 
 
 def collective_bytes_total(hlo_text: str) -> float:
     """Total per-device wire bytes across all collectives."""
-    return sum(v["wire_bytes"] for v in parse_collectives(hlo_text).values())
-
-
-# ---------------------------------------------------------------------------
-# Instruction selection + counting
-# ---------------------------------------------------------------------------
-
-def best_instr(machine: MachineModel, hlo_dtype: str) -> Optional[str]:
-    """Highest-throughput supported MFMA instruction for an operand dtype.
-
-    Thin wrapper: instruction selection is a device property owned by
-    :mod:`repro.arch.select`; the machine contributes its backing spec and
-    the active ``mfma_scale``.
-    """
-    machine = as_machine(machine)
-    spec = machine.spec
-    if spec is None and machine.gpu_table is not None:
-        from repro.arch.registry import get_device
-        spec = get_device(machine.gpu_table)   # hand-built legacy model
-    if spec is None or not spec.has_cycle_table:
-        return None
-    return arch_select.best_mfma_for_hlo(spec, hlo_dtype,
-                                         mfma_scale=machine.mfma_scale)
-
-
-def mfma_count(dot: DotOp, instr_name: str) -> int:
-    i = isa.lookup(instr_name)
-    tiles = (dot.batch * math.ceil(dot.m / i.m) * math.ceil(dot.n / i.n)
-             * math.ceil(dot.k / i.k))
-    return math.ceil(tiles / i.blocks)
+    return hlo_ir.collective_wire_bytes(hlo_text)
 
 
 @dataclasses.dataclass
@@ -298,43 +77,19 @@ def predict_dots(machine: MachineModel,
     """Matrix-unit-bound time for an explicit (dot, executed-count) list.
 
     ``machine`` may be a MachineModel, a ``repro.arch.DeviceSpec``, or a
-    registered device name.
+    registered device name.  Delegates to the ONE model home,
+    :func:`repro.perf.engines.cost_dot_pairs` (also behind
+    ``MfmaAnalyticEngine``), so legacy and pipeline results agree exactly.
     """
     machine = as_machine(machine)
-    instr_mix: Dict[str, int] = defaultdict(int)
-    total_cycles = 0.0
-    total_mfma = 0.0
-    matrix_flops = 0.0
-
-    for d, cnt in dots_with_counts:
-        if machine.mxu_count:  # TPU analytic path: 128x128 systolic passes
-            passes = (d.batch * math.ceil(d.m / machine.mxu_dim)
-                      * math.ceil(d.n / machine.mxu_dim)
-                      * math.ceil(d.k / machine.mxu_dim))
-            # one pass streams mxu_dim rows through the array
-            cycles = passes * machine.mxu_dim / machine.mxu_count
-            cycles *= machine.mfma_scale  # what-if applies to MXU too
-            total_cycles += cnt * cycles
-            instr_mix[f"mxu_{machine.mxu_dim}x{machine.mxu_dim}"] += int(cnt * passes)
-            total_mfma += cnt * passes
-        else:
-            name = best_instr(machine, d.in_dtype) or best_instr(machine, {
-                "bf16": "bf16", "f16": "f16"}.get(fallback_dtype, "f32"))
-            if name is None:
-                continue
-            n = mfma_count(d, name)
-            lat = machine.mfma_cycles(name)
-            # throughput bound: chip retires mce_per_cu*cu_count MFMAs / lat
-            total_cycles += cnt * n * lat / (machine.mce_per_cu * machine.cu_count)
-            instr_mix[name] += int(cnt * n)
-            total_mfma += cnt * n
-        matrix_flops += cnt * d.flops
-
-    time_s = total_cycles / (machine.clock_mhz * 1e6)
+    costs = cost_dot_pairs(machine, dots_with_counts,
+                           fallback_dtype=fallback_dtype)
     return Prediction(machine=machine.name, mfma_scale=machine.mfma_scale,
-                      total_mfma=int(total_mfma), mce_cycles=total_cycles,
-                      mce_time_s=time_s, matrix_flops=matrix_flops,
-                      instr_mix=dict(instr_mix),
+                      total_mfma=int(costs.total_mfma),
+                      mce_cycles=costs.total_cycles,
+                      mce_time_s=costs.time_s,
+                      matrix_flops=costs.matrix_flops,
+                      instr_mix=dict(costs.instr_mix),
                       repetition_factor=repetition_factor)
 
 
@@ -356,33 +111,3 @@ def predict(machine: MachineModel, hlo_text: str,
         rep = max(1.0, cost_flops / parsed_flops)
     return predict_dots(machine, [(d, rep) for d in dots],
                         fallback_dtype=fallback_dtype, repetition_factor=rep)
-
-
-# ---------------------------------------------------------------------------
-# Representative-loop simulation (validates the analytic throughput model)
-# ---------------------------------------------------------------------------
-
-def gemm_stream(instr_name: str, n_tiles: int, wf_id: int) -> Program:
-    """Independent MFMA tiles for one WF (software-pipelined: no dep chain)."""
-    return [mfma(instr_name, d=f"acc{t}", a=f"a{t}", b=f"b{t}", c=f"acc{t}")
-            for t in range(n_tiles)]
-
-
-def simulate_gemm_cu(machine: MachineModel, instr_name: str, *,
-                     tiles_per_wf: int = 8, n_wf: int = 8) -> Dict[str, float]:
-    """Simulate one CU running a GEMM tile loop across n_wf wavefronts.
-
-    WFs are assigned round-robin to SIMD units; with n_wf >= simd_per_cu the
-    analytic throughput (mce_per_cu MFMAs per mfma_cycles) should be reached.
-    """
-    machine = as_machine(machine)
-    wfs = [Wavefront(w, gemm_stream(instr_name, tiles_per_wf, w),
-                     cu=0, simd=w % machine.simd_per_cu)
-           for w in range(n_wf)]
-    res = simulate(machine, Workload(wfs))
-    total_mfma = tiles_per_wf * n_wf
-    lat = machine.mfma_cycles(instr_name)
-    analytic = total_mfma * lat / min(n_wf, machine.mce_per_cu)
-    return {"makespan": res.makespan, "analytic_cycles": analytic,
-            "mce_utilization": res.mce_utilization(machine),
-            "total_mfma": total_mfma}

@@ -10,7 +10,10 @@ workload-level (Amdahl-limited) effect.
 The single ``mfma_scale`` float generalises to composable
 :class:`repro.arch.Overlay` scenarios (clock/memory-latency/bandwidth
 scaling, per-instruction table patches); sweeps are overlay *grids* —
-see :func:`overlay_table` and :func:`grid_sweep`.
+see :func:`overlay_table` and :func:`grid_sweep` for the
+instruction-isolated (microbenchmark) view and :func:`workload_grid` for
+whole-workload scenario sweeps through the unified ``repro.perf``
+pipeline (any engine, parsed once).
 """
 
 from __future__ import annotations
@@ -22,7 +25,8 @@ from repro.core import isa
 from repro.core.machine import MachineModel
 from repro.core.microbench import measure_latency
 
-__all__ = ["scale_table", "scale_sweep", "overlay_table", "grid_sweep"]
+__all__ = ["scale_table", "scale_sweep", "overlay_table", "grid_sweep",
+           "workload_grid"]
 
 
 def _validated_instrs(machine: MachineModel) -> Sequence[str]:
@@ -92,3 +96,23 @@ def grid_sweep(machine: MachineModel, instr_name: str, *, n_mfma: int = 4,
         out[ov.describe()] = measure_latency(machine.with_overlay(ov),
                                              instr_name, n_mfma)
     return out
+
+
+def workload_grid(workload, machine, *, engine="mfma", **axes):
+    """Whole-workload scenario grid through the unified pipeline.
+
+    The workload-level counterpart of :func:`grid_sweep`: ``workload`` is
+    HLO text / a ``KernelGraph`` / a dry-run artifact path, ``engine`` any
+    registered cost engine, and the result maps each overlay scenario to
+    its shared-schema :class:`repro.perf.Report` (parsed exactly once
+    across the whole grid).
+
+    >>> workload_grid(compiled.as_text(), "mi300x",
+    ...               mfma_scale=(0.5, 1, 2), clock_scale=(1, 1.2))
+    {'mfma x0.5': Report(...), ...}
+    """
+    from repro.perf.pipeline import predict  # local: keep core import-light
+    overlays = overlay_grid(**axes)
+    reports = predict(workload, device=machine, engine=engine,
+                      overlays=overlays)
+    return {ov.describe(): rep for ov, rep in zip(overlays, reports)}

@@ -30,47 +30,15 @@ from pathlib import Path
 import jax
 
 from repro.configs import SHAPES, all_cells, applicable, get_config
-from repro.core import hlo_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import cell_fn_and_specs
 from repro.parallel.api import set_mesh
+# the upcast-convert estimator and the loop-aware module parser both live
+# in the unified performance pipeline now (one regex home)
+from repro.perf.cache import parse_cached
+from repro.perf.hlo_ir import cpu_upcast_bytes as _cpu_upcast_bytes
 
 __all__ = ["run_cell", "main"]
-
-
-import re as _re
-
-_CONVERT_RE = _re.compile(
-    r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*f32\[([\d,]+)\][^\s]*\s+convert\(")
-_HDR_RE = _re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
-
-
-def _cpu_upcast_bytes(hlo_text: str) -> int:
-    """XLA:CPU legalises bf16 dots by hoisting whole-buffer f32 converts
-    (often outside loops).  These buffers don't exist on TPU (native bf16
-    MXU operands) — estimate their total so the roofline can report a
-    TPU-corrected temp size alongside the raw CPU number."""
-    total = 0
-    in_fused = False
-    for line in hlo_text.splitlines():
-        h = _HDR_RE.match(line)
-        if h:
-            in_fused = "fused" in h.group(1) or "region" in h.group(1)
-            continue
-        if in_fused:
-            continue
-        m = _CONVERT_RE.match(line)
-        if not m:
-            continue
-        dims = m.group(1)
-        n = 1
-        for d in dims.split(","):
-            n *= int(d)
-        if n * 4 < 64 * 2**20:
-            continue
-        if f"bf16[{dims}]" in hlo_text:   # converts a bf16 buffer of same shape
-            total += n * 4
-    return total
 
 
 def _mem_stats(compiled):
@@ -136,18 +104,20 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     except Exception:
         rec["cost_analysis"] = {}
 
-    # loop-aware stats from the compiled (post-SPMD, per-device) module
+    # loop-aware stats from the compiled (post-SPMD, per-device) module;
+    # parse_cached means the what-if / roofline consumers of this same
+    # text reuse the KernelGraph instead of re-parsing
     try:
-        stats = hlo_analysis.analyze(compiled.as_text())
-        top_ops = dict(sorted(stats.bytes_by_opcode.items(),
+        graph = parse_cached(compiled.as_text())
+        top_ops = dict(sorted(graph.bytes_by_opcode.items(),
                               key=lambda kv: -kv[1])[:10])
         rec["hlo"] = {
-            "flops_per_device": stats.flops,
-            "bytes_per_device": stats.bytes_accessed,
-            "collectives": stats.collectives,
-            "collective_wire_bytes": stats.collective_wire_bytes,
+            "flops_per_device": graph.flops,
+            "bytes_per_device": graph.bytes_accessed,
+            "collectives": graph.collectives,
+            "collective_wire_bytes": graph.collective_wire,
             "bytes_by_opcode": top_ops,
-            "flash_block_bytes": stats.flash_block_bytes,
+            "flash_block_bytes": graph.flash_block_bytes,
         }
     except Exception as e:  # keep the cell green; roofline can re-derive
         rec["hlo"] = {"error": f"{type(e).__name__}: {e}"}

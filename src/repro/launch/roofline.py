@@ -13,7 +13,9 @@ N_active for MoE), and the useful-compute ratio MODEL/HLO.
 
 Peaks and bandwidths come from the ``repro.arch`` device registry (default
 ``tpu_v5e``: 197 bf16 TF/s, 819 GB/s HBM, 2 x 50 GB/s ICI) — any
-registered device rooflines via ``--device``.
+registered device rooflines via ``--device``.  The bound math itself is
+the unified pipeline's :class:`repro.perf.engines.RooflineEngine`; this
+module is the dry-run-artifact CLI over it.
 
     python -m repro.launch.roofline --dryrun-dir experiments/dryrun \
         [--device tpu_v5p]
@@ -22,7 +24,6 @@ registered device rooflines via ``--device``.
 from __future__ import annotations
 
 import argparse
-import json
 from pathlib import Path
 from typing import Dict, Optional
 
@@ -30,6 +31,9 @@ import jax
 
 from repro.arch import DeviceSpec, get_device
 from repro.configs import SHAPES, get_config
+from repro.perf.cache import load_artifact
+from repro.perf.engines import RooflineEngine
+from repro.perf.hlo_ir import KernelGraph
 
 _DEFAULT_DEVICE = "tpu_v5e"
 
@@ -75,39 +79,32 @@ def model_flops(arch: str, shape_name: str, n_params: int) -> float:
 def roofline_row(rec: Dict, spec: Optional[DeviceSpec] = None
                  ) -> Optional[Dict]:
     spec = spec or get_device(_DEFAULT_DEVICE)
-    peak_flops = spec.peak_flops_effective
-    hbm_bw = spec.memory.hbm_bw
-    links, link_bw = spec.interconnect.links, spec.interconnect.link_bw
     hlo = rec.get("hlo", {})
     if "flops_per_device" not in hlo:
         return None
     n_dev = rec["n_devices"]
     f = hlo["flops_per_device"]
     b = hlo["bytes_per_device"]
-    c = hlo["collective_wire_bytes"]
-    # kernel-adjusted: flash-attention block intermediates are VMEM-resident
-    # in the shipped Pallas kernel; the XLA reference materialises them
-    b_kernel = b - hlo.get("flash_block_bytes", 0.0)
-
-    def _t(amount: float, rate: float) -> float:
-        # a spec that omits a bandwidth can't bound traffic it carries
-        if rate <= 0:
-            return 0.0 if amount <= 0 else float("inf")
-        return amount / rate
-
-    compute_t = _t(f, peak_flops)
-    memory_t = _t(b_kernel, hbm_bw)
-    memory_t_xla = _t(b, hbm_bw)
-    coll_t = _t(c, links * link_bw)
-    dominant = max(("compute", compute_t), ("memory", memory_t),
-                   ("collective", coll_t), key=lambda kv: kv[1])[0]
+    graph = KernelGraph.from_totals(
+        flops=f, bytes_accessed=b,
+        collective_wire=hlo["collective_wire_bytes"],
+        # kernel-adjusted: flash-attention block intermediates are
+        # VMEM-resident in the shipped Pallas kernel; the XLA reference
+        # materialises them
+        flash_block_bytes=hlo.get("flash_block_bytes", 0.0),
+        key=f"{rec['arch']}/{rec['shape']}")
+    report = RooflineEngine().estimate(graph, spec)
+    report_xla = RooflineEngine(kernel_adjusted=False).estimate(graph, spec)
+    compute_t, memory_t = report.compute_time_s, report.memory_time_s
+    coll_t = report.collective_time_s
     mf = model_flops(rec["arch"], rec["shape"], rec["n_params"]) / n_dev
-    step_t = max(compute_t, memory_t, coll_t)
+    step_t = report.total_time_s
+    peak_flops = report.metrics["peak_flops"]
     return {
         "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
         "compute_t": compute_t, "memory_t": memory_t,
-        "memory_t_xla": memory_t_xla,
-        "collective_t": coll_t, "dominant": dominant,
+        "memory_t_xla": report_xla.memory_time_s,
+        "collective_t": coll_t, "dominant": report.bound,
         "model_flops_dev": mf, "hlo_flops_dev": f,
         "useful_ratio": mf / f if f else 0.0,
         # roofline fraction: useful model FLOPs per second at the
@@ -126,7 +123,7 @@ def load_cells(dryrun_dir: str, mesh: str = "single",
     spec = get_device(device)
     rows = []
     for f in sorted(Path(dryrun_dir).glob(f"*_{mesh}.json")):
-        rec = json.loads(f.read_text())
+        rec = load_artifact(f)
         row = roofline_row(rec, spec)
         if row:
             rows.append(row)

@@ -1,0 +1,37 @@
+"""repro.perf — the unified performance-model pipeline.
+
+One HLO -> :class:`KernelGraph` IR behind pluggable cost engines, cached
+artifacts, and fleet-wide scenario sweeps:
+
+  hlo_ir    — the single parser (dots, collectives, memory ops, while
+              trip counts, CPU-upcast accounting) everything consumes
+  engines   — CostEngine protocol: RooflineEngine / MfmaAnalyticEngine /
+              ScoreboardEngine, one shared Report schema
+  report    — Report/OpCost result types + sweep tables
+  cache     — content-hashed memoization of parsed graphs + artifacts
+  pipeline  — predict(workload, device=, engine=, overlays=) and the
+              cartesian sweep() that parses each module exactly once
+
+``repro.core.hlo_bridge`` and ``repro.core.hlo_analysis`` remain as thin
+compatibility shims; new code should target this package.  To add a cost
+engine, see ROADMAP.md "Architecture" (a <30-line change).
+"""
+
+from repro.perf.hlo_ir import (BYTES_PER_ELEM, DotOp, KernelGraph,  # noqa: F401
+                               KernelOp, parse_module, parse_static_dots)
+from repro.perf.report import OpCost, Report, format_reports  # noqa: F401
+from repro.perf.engines import (CostEngine, MfmaAnalyticEngine,  # noqa: F401
+                                RooflineEngine, ScoreboardEngine)
+from repro.perf.cache import cache_stats, clear_cache, parse_cached  # noqa: F401
+from repro.perf.pipeline import (as_graph, get_engine, list_engines,  # noqa: F401
+                                 predict, register_engine, sweep)
+
+__all__ = [
+    "BYTES_PER_ELEM", "DotOp", "KernelOp", "KernelGraph",
+    "parse_module", "parse_static_dots",
+    "OpCost", "Report", "format_reports",
+    "CostEngine", "RooflineEngine", "MfmaAnalyticEngine", "ScoreboardEngine",
+    "parse_cached", "cache_stats", "clear_cache",
+    "predict", "sweep", "as_graph",
+    "register_engine", "get_engine", "list_engines",
+]

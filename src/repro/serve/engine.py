@@ -48,7 +48,13 @@ class ServeEngine:
                  extras: Optional[Dict] = None) -> GenerateResult:
         """tokens: (B, S) int32 prompt batch -> greedy/temperature decode."""
         B, S = tokens.shape
-        assert S + n_steps <= self.max_len
+        if S + n_steps > self.max_len:
+            raise ValueError(
+                f"request does not fit its bucket: prompt length {S} + "
+                f"n_steps {n_steps} = {S + n_steps} exceeds this engine's "
+                f"max_len bucket of {self.max_len} (prefill/decode are "
+                f"jitted per (batch, max_len) bucket; build a ServeEngine "
+                f"with max_len >= {S + n_steps} or shorten the request)")
         batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
         if extras:
             batch.update(extras)

@@ -82,12 +82,26 @@ class TrainController:
         self.restarts = 0
         self.log: List[Dict] = []
 
-    def _restore(self, state):
-        """Restore (params, opt_state) from the latest checkpoint."""
+    def _restore(self, state, fallback_state=None, fallback_step: int = 0):
+        """Restore (params, opt_state) from the latest checkpoint.
+
+        The async save thread must be joined BEFORE probing for the latest
+        checkpoint: a save launched a step or two before the failure may
+        not have done its atomic rename yet, and probing first would miss
+        it.  (Probe-then-wait was the restart-divergence bug: with no
+        visible checkpoint the controller "replayed" from the *current*
+        warm state at step 0, double-applying updates.)
+
+        With no checkpoint on disk the only correct replay base is the
+        state the run started from — ``fallback_state`` at
+        ``fallback_step`` — never the current mid-run state.
+        """
+        self.ckpt.wait()
         step = latest_step(self.ckpt.dir)
         if step is None:
-            return state, 0
-        self.ckpt.wait()
+            if fallback_state is None:
+                fallback_state = state
+            return fallback_state, fallback_step
         restored, step = restore(self.ckpt.dir, state)
         return restored, step
 
@@ -97,6 +111,7 @@ class TrainController:
         ``data_iter_fn(step)`` returns that step's batch (resumable by
         construction).  Returns (state, metrics_log)."""
         step = start_step
+        initial_state, initial_step = state, start_step
         while step < n_steps:
             try:
                 batch = data_iter_fn(step)
@@ -119,7 +134,8 @@ class TrainController:
                 self.restarts += 1
                 if self.restarts > self.max_restarts:
                     raise RuntimeError("restart budget exhausted") from e
-                state, step = self._restore(state)
+                state, step = self._restore(state, initial_state,
+                                            initial_step)
                 self.log.append({"step": step, "event": "restart",
                                  "cause": str(e)})
         self.ckpt.maybe_save(step, state, force=True)

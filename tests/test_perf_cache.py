@@ -1,0 +1,97 @@
+"""Content-hashed caching: a full engines x overlays x devices sweep
+parses each HLO module exactly once; artifacts memoise on content."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.arch import Overlay
+from repro.perf import cache_stats, clear_cache, predict, sweep
+from repro.perf.cache import load_artifact, parse_cached
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    clear_cache()
+    yield
+    clear_cache()
+
+
+def _txt(n):
+    a = jax.ShapeDtypeStruct((n, n), jnp.bfloat16)
+    return jax.jit(lambda x, y: x @ y).lower(a, a).compile().as_text()
+
+
+def test_three_engine_two_overlay_sweep_parses_once():
+    """The acceptance sweep: 3 engines x 2 overlays x 2 devices over one
+    module -> exactly ONE parse (legacy stack parsed once per estimator)."""
+    txt = _txt(128)
+    reports = sweep({"gemm": txt}, devices=("mi200", "mi300"),
+                    engines=("roofline", "mfma", "scoreboard"),
+                    overlays=(Overlay(), Overlay(mfma_scale=2.0)))
+    assert len(reports) == 2 * 3 * 2
+    assert cache_stats().parses == 1
+    # asking again — any consumer, any engine — is a content-hash hit
+    predict(txt, device="mi300x", engine="roofline")
+    st = cache_stats()
+    assert st.parses == 1 and st.hits == 1
+
+
+def test_distinct_modules_parse_once_each():
+    t1, t2 = _txt(128), _txt(192)
+    sweep({"a": t1, "b": t2}, engines=("roofline", "mfma"),
+          overlays=(Overlay(), Overlay(clock_scale=1.2)))
+    predict(t1, device="mi300", engine="mfma")   # re-ask: cache hit
+    st = cache_stats()
+    assert st.parses == 2
+    assert st.hits >= 1
+
+
+def test_identical_text_shares_entry():
+    t = _txt(128)
+    parse_cached(t)
+    parse_cached(str(t))   # different str object, same content hash
+    st = cache_stats()
+    assert st.parses == 1 and st.hits == 1
+
+
+def test_tpu_correct_flag_is_part_of_key():
+    t = _txt(128)
+    parse_cached(t, tpu_correct=True)
+    parse_cached(t, tpu_correct=False)
+    assert cache_stats().parses == 2
+
+
+def test_artifact_cache_content_hashed(tmp_path):
+    rec = {"arch": "qwen2-7b", "shape": "train_4k", "n_devices": 4,
+           "hlo": {"flops_per_device": 1e9, "bytes_per_device": 1e6,
+                   "collective_wire_bytes": 0.0}}
+    p = tmp_path / "cell.json"
+    p.write_text(json.dumps(rec))
+    a = load_artifact(p)
+    b = load_artifact(p)
+    assert a is b
+    st = cache_stats()
+    assert st.artifact_loads == 1 and st.artifact_hits == 1
+    # rewriting the file invalidates by content, not by path
+    rec["hlo"]["flops_per_device"] = 2e9
+    p.write_text(json.dumps(rec))
+    c = load_artifact(p)
+    assert c["hlo"]["flops_per_device"] == 2e9
+    assert cache_stats().artifact_loads == 2
+
+
+def test_artifact_path_predicts_roofline(tmp_path):
+    rec = {"arch": "qwen2-7b", "shape": "train_4k", "n_devices": 4,
+           "hlo": {"flops_per_device": 1e12, "bytes_per_device": 1e9,
+                   "collective_wire_bytes": 1e8}}
+    p = tmp_path / "qwen2-7b_train_4k_single.json"
+    p.write_text(json.dumps(rec))
+    rep = predict(str(p), device="tpu_v5e", engine="roofline")
+    assert rep.total_time_s > 0
+    assert rep.workload == "qwen2-7b/train_4k"
+    # pathlib.Path works too (os.PathLike coercion)
+    rep2 = predict(p, device="tpu_v5e", engine="roofline")
+    assert rep2.total_time_s == rep.total_time_s

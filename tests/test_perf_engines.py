@@ -1,0 +1,226 @@
+"""Cost engines: shared Report schema on every registered device, exact
+parity with the legacy estimators (hlo_bridge.predict, launch.roofline),
+and scoreboard-vs-analytic agreement — including under overlay scenarios."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.arch import IDENTITY, Overlay, get_device, list_devices
+from repro.core import hlo_bridge as hb
+from repro.core.machine import get_machine
+from repro.launch.roofline import roofline_row
+from repro.perf import (MfmaAnalyticEngine, RooflineEngine, Report,
+                        ScoreboardEngine, parse_cached, predict)
+from repro.perf.hlo_ir import KernelGraph
+
+ENGINES = {"roofline": RooflineEngine, "mfma": MfmaAnalyticEngine,
+           "scoreboard": ScoreboardEngine}
+
+# overlay scenarios the parity sweep covers (no table patches: those would
+# bolt a cycle table onto MXU devices)
+OVERLAYS = [IDENTITY, Overlay(mfma_scale=2.0),
+            Overlay(mfma_scale=0.5, clock_scale=1.2)]
+
+
+@pytest.fixture(scope="module")
+def gemm_txt():
+    a = jax.ShapeDtypeStruct((256, 256), jnp.bfloat16)
+    return jax.jit(lambda x, y: x @ y).lower(a, a).compile().as_text()
+
+
+@pytest.fixture(scope="module")
+def mlp_txt():
+    """Two dots + elementwise: a (loop-free) multi-op dry-run fixture."""
+    a = jax.ShapeDtypeStruct((64, 128), jnp.bfloat16)
+    w1 = jax.ShapeDtypeStruct((128, 256), jnp.bfloat16)
+    w2 = jax.ShapeDtypeStruct((256, 32), jnp.bfloat16)
+
+    def fn(x, u, v):
+        return jax.nn.gelu(x @ u) @ v
+
+    return jax.jit(fn).lower(a, w1, w2).compile().as_text()
+
+
+# ---------------------------------------------------------------------------
+# Shared schema on EVERY registered device
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine_name", list(ENGINES))
+@pytest.mark.parametrize("device", list_devices())
+def test_every_engine_every_device_shared_schema(engine_name, device,
+                                                 gemm_txt):
+    rep = predict(gemm_txt, device=device, engine=engine_name)
+    assert isinstance(rep, Report)
+    assert rep.engine == engine_name
+    assert rep.device == device
+    assert rep.scenario == "baseline"
+    assert rep.total_time_s > 0 and math.isfinite(rep.total_time_s)
+    assert rep.bound in ("compute", "memory", "collective", "matrix")
+    assert 0.0 <= rep.utilization <= 1.0 + 1e-9
+    assert rep.per_op and all(o.time_s >= 0 for o in rep.per_op)
+    assert rep.as_dict()["engine"] == engine_name  # JSON-able
+
+
+# ---------------------------------------------------------------------------
+# Exact parity: MfmaAnalyticEngine vs legacy hlo_bridge.predict
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("overlay", OVERLAYS, ids=lambda o: o.describe())
+@pytest.mark.parametrize("device", list_devices())
+def test_mfma_engine_matches_legacy_predict(device, overlay, gemm_txt,
+                                            mlp_txt):
+    for txt in (gemm_txt, mlp_txt):
+        machine = get_machine(device, overlay=overlay)
+        legacy = hb.predict(machine, txt)
+        rep = predict(txt, device=machine, engine="mfma")
+        assert rep.total_time_s == legacy.mce_time_s          # exact
+        assert rep.metrics["mce_cycles"] == legacy.mce_cycles
+        assert rep.metrics["total_mfma"] == legacy.total_mfma
+        assert rep.metrics["instr_mix"] == legacy.instr_mix
+        assert rep.metrics["matrix_flops"] == legacy.matrix_flops
+
+
+def test_mfma_engine_loop_aware_counts():
+    """On a scanned module the engine uses exact per-dot trip counts —
+    equivalent to legacy predict renormalised by loop-aware flops."""
+    a = jax.ShapeDtypeStruct((64, 64), jnp.bfloat16)
+
+    def fn(x):
+        def body(h, _):
+            return (h @ x).astype(h.dtype), None
+        h, _ = jax.lax.scan(body, x, None, length=7)
+        return h
+
+    txt = jax.jit(fn).lower(a).compile().as_text()
+    graph = parse_cached(txt)
+    machine = get_machine("mi300")
+    legacy = hb.predict(machine, txt, cost_flops=graph.flops)
+    rep = predict(graph, device=machine, engine="mfma")
+    assert rep.total_time_s == pytest.approx(legacy.mce_time_s)
+    assert rep.metrics["total_mfma"] == legacy.total_mfma
+
+
+# ---------------------------------------------------------------------------
+# Exact parity: RooflineEngine vs legacy launch.roofline row math
+# ---------------------------------------------------------------------------
+
+def _rec(f=1.2e12, b=3.4e9, c=5.6e8, flash=1.1e8):
+    return {"arch": "qwen2-7b", "shape": "train_4k", "mesh": "16x16",
+            "n_devices": 256, "n_params": int(7e9),
+            "hlo": {"flops_per_device": f, "bytes_per_device": b,
+                    "collective_wire_bytes": c, "flash_block_bytes": flash,
+                    "collectives": {}},
+            "memory": {"total_bytes_per_device": 8 * 2**30}}
+
+
+@pytest.mark.parametrize("device", list_devices())
+def test_roofline_engine_matches_legacy_row(device):
+    rec = _rec()
+    spec = get_device(device)
+    row = roofline_row(rec, spec)
+    hlo = rec["hlo"]
+    g = KernelGraph.from_totals(
+        flops=hlo["flops_per_device"], bytes_accessed=hlo["bytes_per_device"],
+        collective_wire=hlo["collective_wire_bytes"],
+        flash_block_bytes=hlo["flash_block_bytes"])
+    rep = RooflineEngine().estimate(g, spec)
+    assert rep.compute_time_s == row["compute_t"]
+    assert rep.memory_time_s == row["memory_t"]
+    assert rep.collective_time_s == row["collective_t"]
+    assert rep.bound == row["dominant"]
+    # the legacy hand-math for the kernel-adjusted memory term
+    assert rep.memory_time_s == pytest.approx(
+        (hlo["bytes_per_device"] - hlo["flash_block_bytes"])
+        / spec.memory.hbm_bw)
+    xla = RooflineEngine(kernel_adjusted=False).estimate(g, spec)
+    assert xla.memory_time_s == row["memory_t_xla"]
+
+
+@pytest.mark.parametrize("overlay", OVERLAYS[1:], ids=lambda o: o.describe())
+def test_roofline_engine_overlay_scenarios(overlay):
+    """Under an overlay the engine matches the legacy row computed on the
+    overlay-transformed spec (plus the engine-level mfma_scale term)."""
+    rec = _rec()
+    spec = get_device("tpu_v5e")
+    machine = get_machine("tpu_v5e", overlay=overlay)
+    rep = predict(KernelGraph.from_totals(
+        flops=rec["hlo"]["flops_per_device"],
+        bytes_accessed=rec["hlo"]["bytes_per_device"],
+        collective_wire=rec["hlo"]["collective_wire_bytes"],
+        flash_block_bytes=rec["hlo"]["flash_block_bytes"]),
+        device=machine, engine="roofline")
+    # legacy equivalent: apply the spec-level overlay knobs by hand...
+    legacy_spec = overlay.apply(spec) if overlay.mfma_scale == 1.0 else \
+        Overlay(clock_scale=overlay.clock_scale,
+                mem_latency_scale=overlay.mem_latency_scale,
+                bw_scale=overlay.bw_scale).apply(spec)
+    row = roofline_row(rec, legacy_spec)
+    # ...and divide the peak by the machine-level mfma_scale knob
+    assert rep.compute_time_s == pytest.approx(
+        row["compute_t"] * overlay.mfma_scale)
+    assert rep.memory_time_s == pytest.approx(row["memory_t"])
+    assert rep.collective_time_s == pytest.approx(row["collective_t"])
+
+
+# ---------------------------------------------------------------------------
+# Scoreboard engine: simulated vs analytic
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("device", ["mi200", "mi300"])
+def test_scoreboard_validates_analytic(device, gemm_txt):
+    ana = predict(gemm_txt, device=device, engine="mfma")
+    sim = predict(gemm_txt, device=device, engine="scoreboard")
+    assert sim.metrics["simulated"] == 1.0
+    assert sim.metrics["total_mfma"] == ana.metrics["total_mfma"]
+    # measured throughput reaches the analytic bound within issue overhead
+    assert ana.total_time_s <= sim.total_time_s <= 1.15 * ana.total_time_s
+    assert sim.utilization >= 0.90
+
+
+@pytest.mark.parametrize("device", ["tpu_v5e", "mi300"])
+def test_mxu_utilization_bounded_under_scale_overlay(device, gemm_txt):
+    """A faster-MCE scenario must not report >1 utilization: the MXU cost
+    path scales pass time by mfma_scale, so the peak must scale too."""
+    for scale in (0.25, 1.0, 4.0):
+        rep = predict(gemm_txt, device=device, engine="mfma",
+                      overlays=Overlay(mfma_scale=scale))
+        assert 0.0 < rep.utilization <= 1.0 + 1e-9, (device, scale)
+
+
+def test_scoreboard_mxu_fallback(gemm_txt):
+    rep = predict(gemm_txt, device="tpu_v5e", engine="scoreboard")
+    assert rep.engine == "scoreboard"
+    assert rep.metrics["simulated"] == 0.0   # no instruction stream on MXU
+    ana = predict(gemm_txt, device="tpu_v5e", engine="mfma")
+    assert rep.total_time_s == ana.total_time_s
+
+
+def test_scoreboard_scale_overlay_scales_time(gemm_txt):
+    base = predict(gemm_txt, device="mi300", engine="scoreboard")
+    x2 = predict(gemm_txt, device="mi300", engine="scoreboard",
+                 overlays=Overlay(mfma_scale=2.0))
+    assert x2.total_time_s == pytest.approx(2 * base.total_time_s, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Custom engines plug into the same pipeline
+# ---------------------------------------------------------------------------
+
+def test_register_custom_engine(gemm_txt):
+    from repro.perf import register_engine
+    from repro.perf.report import Report as R
+
+    class FlopsPerByteEngine:
+        name = "intensity"
+
+        def estimate(self, graph, machine):
+            return R(engine=self.name, device="any",
+                     total_time_s=graph.flops / max(graph.bytes_accessed, 1),
+                     bound="compute")
+
+    register_engine("intensity", FlopsPerByteEngine)
+    rep = predict(gemm_txt, device="mi300", engine="intensity")
+    assert rep.engine == "intensity" and rep.total_time_s > 0

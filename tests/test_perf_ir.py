@@ -1,0 +1,223 @@
+"""The unified HLO -> KernelGraph parser: typed ops, loop multipliers
+(nested whiles, trip-count fallbacks), static dot parsing, upcast bytes."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.perf import hlo_ir
+from repro.perf.hlo_ir import KernelGraph, parse_module, parse_static_dots
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+# ---------------------------------------------------------------------------
+# Typed ops from real compiled modules
+# ---------------------------------------------------------------------------
+
+def test_plain_dot_graph():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    g = parse_module(_compiled_text(lambda x, y: x @ y, a, b))
+    assert g.flops == 2 * 128 * 256 * 64
+    dots = g.dots
+    assert len(dots) == 1
+    d = dots[0]
+    assert (d.batch, d.m, d.n, d.k) == (1, 128, 64, 256)
+    assert d.count == 1.0
+    assert d.kind == "dot" and d.label.startswith("dot[")
+    assert g.key  # content-hashed
+    assert g.source == "hlo"
+
+
+def test_memory_ops_aggregate_to_totals():
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    g = parse_module(_compiled_text(lambda x: jnp.tanh(x) + 1.0, a))
+    assert g.bytes_accessed >= 2 * 256 * 256 * 4  # read + write
+    mem = [op for op in g.ops if op.kind == "memory"]
+    assert mem, "memory-bound fusions must appear as typed ops"
+    # per-opcode memory ops tile the bytes_by_opcode aggregate exactly
+    assert sum(op.bytes for op in mem) == pytest.approx(
+        sum(v for k, v in g.bytes_by_opcode.items() if k != "dot"))
+
+
+def test_scan_multiplies_counts():
+    """A dot inside a 7-trip scan must carry count=7 (XLA's own
+    cost_analysis counts it once — the reason the loop walk exists)."""
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def fn(x):
+        def body(h, _):
+            return h @ x * 0.99, None
+        h, _ = jax.lax.scan(body, x, None, length=7)
+        return h
+
+    g = parse_module(_compiled_text(fn, a))
+    assert g.flops == pytest.approx(7 * 2 * 64 ** 3, rel=0.01)
+    counts = [c for _, c in g.dot_pairs()]
+    assert 7.0 in counts
+
+
+def test_nested_scan_multiplier():
+    a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def fn(x):
+        def outer(h, _):
+            def inner(g, _):
+                return g @ x, None
+            g, _ = jax.lax.scan(inner, h, None, length=3)
+            return g, None
+        h, _ = jax.lax.scan(outer, x, None, length=5)
+        return h
+
+    g = parse_module(_compiled_text(fn, a))
+    assert g.flops == pytest.approx(15 * 2 * 32 ** 3, rel=0.01)
+    # the inner-body dot's executed count is the PRODUCT of trip counts
+    assert any(c == pytest.approx(15.0) for _, c in g.dot_pairs())
+
+
+# ---------------------------------------------------------------------------
+# Trip-count plumbing on handwritten HLO (every fallback layer)
+# ---------------------------------------------------------------------------
+
+def _while_module(outer_attrs: str, inner_attrs: str,
+                  cond_body: str = "") -> str:
+    """Nested while(while(dot)) module; attrs inject backend configs."""
+    cond_body = cond_body or """
+  %ci = s32[] get-tuple-element(%cp), index=0
+  %cn = s32[] constant(3)
+  ROOT %clt = pred[] compare(%ci, %cn), direction=LT
+"""
+    return f"""
+HloModule nested_whiles
+
+%inner_cond (cp: (s32[], f32[16,16])) -> pred[] {{
+  %cp = (s32[], f32[16,16]) parameter(0)
+{cond_body.strip()}
+}}
+
+%inner_body (bp: (s32[], f32[16,16])) -> (s32[], f32[16,16]) {{
+  %bp = (s32[], f32[16,16]) parameter(0)
+  %i = s32[] get-tuple-element(%bp), index=0
+  %x = f32[16,16] get-tuple-element(%bp), index=1
+  %d = f32[16,16] dot(%x, %x), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %bt = (s32[], f32[16,16]) tuple(%i2, %d)
+}}
+
+%outer_cond (op: (s32[], f32[16,16])) -> pred[] {{
+  %op = (s32[], f32[16,16]) parameter(0)
+  %oi = s32[] get-tuple-element(%op), index=0
+  %on = s32[] constant(5)
+  ROOT %olt = pred[] compare(%oi, %on), direction=LT
+}}
+
+%outer_body (obp: (s32[], f32[16,16])) -> (s32[], f32[16,16]) {{
+  %obp = (s32[], f32[16,16]) parameter(0)
+  %oj = s32[] get-tuple-element(%obp), index=0
+  %ox = f32[16,16] get-tuple-element(%obp), index=1
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[16,16]) tuple(%zero, %ox)
+  %w = (s32[], f32[16,16]) while(%init), condition=%inner_cond, body=%inner_body{inner_attrs}
+  %wi = s32[] get-tuple-element(%w), index=1
+  %oone = s32[] constant(1)
+  %oj2 = s32[] add(%oj, %oone)
+  ROOT %obt = (s32[], f32[16,16]) tuple(%oj2, %wi)
+}}
+
+ENTRY %main (p0: f32[16,16]) -> f32[16,16] {{
+  %p0 = f32[16,16] parameter(0)
+  %ezero = s32[] constant(0)
+  %einit = (s32[], f32[16,16]) tuple(%ezero, %p0)
+  %ew = (s32[], f32[16,16]) while(%einit), condition=%outer_cond, body=%outer_body{outer_attrs}
+  ROOT %out = f32[16,16] get-tuple-element(%ew), index=1
+}}
+"""
+
+
+DOT_FLOPS = 2 * 16 ** 3
+
+
+def test_nested_while_known_trip_counts():
+    """known_trip_count backend configs on both loops: counts multiply."""
+    txt = _while_module(
+        ', backend_config={"known_trip_count":{"n":"5"}}',
+        ', backend_config={"known_trip_count":{"n":"3"}}')
+    g = parse_module(txt)
+    pairs = g.dot_pairs()
+    assert len(pairs) == 1
+    assert pairs[0][1] == pytest.approx(15.0)       # 5 outer * 3 inner
+    assert g.flops == pytest.approx(15 * DOT_FLOPS)
+
+
+def test_nested_while_condition_fallback():
+    """No backend config: trip counts come from the conditions'
+    compare(i, constant(N), direction=LT) pattern."""
+    g = parse_module(_while_module("", ""))
+    assert g.dot_pairs()[0][1] == pytest.approx(15.0)
+    assert g.flops == pytest.approx(15 * DOT_FLOPS)
+
+
+def test_unknown_trip_count_falls_back_to_one():
+    """An inner while whose condition has no LT-vs-constant pattern (and
+    no backend config) charges its body exactly once."""
+    opaque_cond = """
+  %ci = s32[] get-tuple-element(%cp), index=0
+  %cz = s32[] constant(0)
+  ROOT %cne = pred[] compare(%ci, %cz), direction=NE
+"""
+    g = parse_module(_while_module("", "", cond_body=opaque_cond))
+    # outer still resolves to 5 via its LT condition; inner falls to 1
+    assert g.dot_pairs()[0][1] == pytest.approx(5.0)
+    assert g.flops == pytest.approx(5 * DOT_FLOPS)
+
+
+def test_known_trip_count_beats_condition_fallback():
+    """The backend config wins over a (different) condition constant."""
+    txt = _while_module(', backend_config={"known_trip_count":{"n":"2"}}',
+                        "")
+    g = parse_module(txt)
+    assert g.dot_pairs()[0][1] == pytest.approx(2 * 3.0)
+
+
+def test_no_entry_raises():
+    with pytest.raises(ValueError, match="ENTRY"):
+        parse_module("HloModule empty\n")
+
+
+# ---------------------------------------------------------------------------
+# Static dots / upcast bytes / totals constructor
+# ---------------------------------------------------------------------------
+
+def test_parse_static_dots_stablehlo():
+    a = jax.ShapeDtypeStruct((256, 512), jnp.bfloat16)
+    b = jax.ShapeDtypeStruct((512, 128), jnp.bfloat16)
+    txt = jax.jit(lambda x, y: x @ y).lower(a, b).as_text()
+    dots = parse_static_dots(txt)
+    assert len(dots) == 1
+    d = dots[0]
+    assert (d.m, d.n, d.k, d.batch) == (256, 128, 512, 1)
+    assert d.in_dtype == "bf16" and d.dtype == "bf16"
+    assert d.flops == 2 * 256 * 128 * 512
+
+
+def test_cpu_upcast_bytes_counts_large_buffer_converts():
+    dims = "8388608,4"  # 32M elements -> 128MiB f32, above the 64MiB floor
+    txt = (f"ENTRY %e (p: bf16[{dims}]) -> f32[{dims}] {{\n"
+           f"  %p = bf16[{dims}] parameter(0)\n"
+           f"  ROOT %c = f32[{dims}] convert(%p)\n"
+           f"}}\n")
+    assert hlo_ir.cpu_upcast_bytes(txt) == 8388608 * 4 * 4
+    # inside a fused computation: not a hoisted legalisation buffer
+    fused = txt.replace("ENTRY %e", "%fused_computation.1")
+    assert hlo_ir.cpu_upcast_bytes(fused) == 0
+
+
+def test_from_totals_roofline_grade():
+    g = KernelGraph.from_totals(flops=1e12, bytes_accessed=2e9,
+                                collective_wire=3e8, key="cell")
+    assert g.source == "totals" and not g.ops
+    assert g.flops == 1e12 and g.collective_wire == 3e8

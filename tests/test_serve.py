@@ -31,6 +31,19 @@ def test_temperature_seed_control():
     assert not np.array_equal(a.tokens, c.tokens)       # different seed/temp
 
 
+def test_bucket_overflow_raises_value_error():
+    """S + n_steps past the jitted (batch, max_len) bucket must raise a
+    ValueError naming the bucket size, not a bare assert."""
+    import pytest
+    eng = ServeEngine(CFG, PARAMS, max_len=32)
+    prompt = np.ones((1, 24), np.int32)
+    with pytest.raises(ValueError, match=r"max_len bucket of 32"):
+        eng.generate(prompt, n_steps=16)   # 24 + 16 > 32
+    # boundary case still fits
+    out = eng.generate(prompt, n_steps=8)
+    assert out.tokens.shape == (1, 8)
+
+
 def test_batch_isolation():
     """Each request decodes independently of its batch neighbours."""
     eng = ServeEngine(CFG, PARAMS, max_len=64)
