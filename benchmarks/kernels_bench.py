@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
+from repro.kernels.plan import plan_for
 
 
 def _time(fn, *args, reps=3):
@@ -21,38 +22,46 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def main():
+def main(device=None):
+    """Blocks come from the spec-driven planner (the production path);
+    each row names the plan it executed."""
     rows = []
     r = np.random.RandomState(0)
     a = jnp.asarray(r.randn(256, 256), jnp.bfloat16)
     b = jnp.asarray(r.randn(256, 256), jnp.bfloat16)
     c = jnp.asarray(r.randn(256, 256), jnp.float32)
-    us = _time(lambda *x: ops.mfma_gemm(*x, block_m=128, block_n=128,
-                                        block_k=128), a, b, c)
+    p = plan_for("mfma_gemm", {"M": 256, "N": 256, "K": 256},
+                 dtype=a.dtype, device=device)
+    us = _time(lambda *x: ops.mfma_gemm(*x, plan=p), a, b, c)
     err = float(jnp.max(jnp.abs(
-        ops.mfma_gemm(a, b, c, block_m=128, block_n=128, block_k=128)
-        - ref.mfma_gemm_ref(a, b, c))))
-    rows.append(("kernel/mfma_gemm_256", us, f"max_err={err:.3f}"))
+        ops.mfma_gemm(a, b, c, plan=p) - ref.mfma_gemm_ref(a, b, c))))
+    rows.append(("kernel/mfma_gemm_256", us,
+                 f"max_err={err:.3f} {p.describe()}"))
 
     q = jnp.asarray(r.randn(1, 256, 4, 64), jnp.bfloat16)
     k = jnp.asarray(r.randn(1, 256, 2, 64), jnp.bfloat16)
     v = jnp.asarray(r.randn(1, 256, 2, 64), jnp.bfloat16)
-    us = _time(lambda *x: ops.flash_attention(*x, block_q=128, block_kv=128),
-               q, k, v)
-    rows.append(("kernel/flash_attention_256", us, "vs ref in tests"))
+    p = plan_for("flash_attention",
+                 {"B": 1, "S": 256, "T": 256, "H": 4, "KV": 2, "hd": 64},
+                 dtype=q.dtype, device=device)
+    us = _time(lambda *x: ops.flash_attention(*x, plan=p), q, k, v)
+    rows.append(("kernel/flash_attention_256", us, p.describe()))
 
     x = jnp.asarray(r.randn(1, 128, 2, 16), jnp.float32)
     dt_in = jnp.asarray(np.abs(r.randn(1, 128, 2)) * 0.3, jnp.float32)
     A = jnp.asarray(-np.ones(2), jnp.float32)
     Bm = jnp.asarray(r.randn(1, 128, 1, 16), jnp.float32)
-    us = _time(lambda *xs: ops.mamba2_ssd(*xs, chunk=32), x, dt_in, A, Bm, Bm)
-    rows.append(("kernel/mamba2_ssd_128", us, "chunk=32"))
+    p = plan_for("mamba2_ssd", {"B": 1, "S": 128, "nh": 2, "hd": 16,
+                                "ds": 16}, dtype=x.dtype, device=device)
+    us = _time(lambda *xs: ops.mamba2_ssd(*xs, plan=p), x, dt_in, A, Bm, Bm)
+    rows.append(("kernel/mamba2_ssd_128", us, p.describe()))
 
-    xe = jnp.asarray(r.randn(4, 64, 128), jnp.bfloat16)
-    we = jnp.asarray(r.randn(4, 128, 64), jnp.bfloat16)
-    us = _time(lambda *xs: ops.moe_gmm(*xs, block_m=64, block_n=64,
-                                       block_k=128), xe, we)
-    rows.append(("kernel/moe_gmm_4x64", us, "E=4"))
+    xe = jnp.asarray(r.randn(4, 128, 128), jnp.bfloat16)
+    we = jnp.asarray(r.randn(4, 128, 128), jnp.bfloat16)
+    p = plan_for("moe_gmm", {"E": 4, "C": 128, "K": 128, "N": 128},
+                 dtype=xe.dtype, device=device)
+    us = _time(lambda *xs: ops.moe_gmm(*xs, plan=p), xe, we)
+    rows.append(("kernel/moe_gmm_4x128", us, p.describe()))
     return rows
 
 

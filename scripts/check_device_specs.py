@@ -60,6 +60,13 @@ def check_spec(name: str) -> list:
         err("bad MXU configuration")
     if not spec.has_cycle_table and not spec.mxu_count:
         err("neither a cycle table nor MXUs: no matrix path at all")
+    # The kernel tile planner budgets block working sets against this;
+    # a catalog device must be plannable (>= one aligned GEMM tile set).
+    if spec.vmem_bytes <= 0:
+        err("vmem_bytes must be positive (kernel tile-planning budget)")
+    elif spec.vmem_bytes < 1 << 20:
+        err(f"vmem_bytes={spec.vmem_bytes} cannot hold one MXU-aligned "
+            "GEMM tile set (needs >= 1 MiB)")
 
     mem, ic = spec.memory, spec.interconnect
     for f in ("l1i_latency", "l1d_latency", "scalar_latency", "lds_latency",

@@ -82,6 +82,7 @@ MI200 = DeviceSpec(
     memory=MemoryHierarchy(hbm_bw=1638e9),          # MI210: 1.6 TB/s HBM2e
     interconnect=Interconnect(links=3, link_bw=50e9),
     cycle_table=_table(MI200_CYCLES),
+    vmem_bytes=8 << 20,      # 8 MiB L2 as the tile-staging budget
 )
 
 MI300 = DeviceSpec(
@@ -91,6 +92,7 @@ MI300 = DeviceSpec(
     memory=MemoryHierarchy(hbm_bw=5300e9),          # HBM3: 5.3 TB/s
     interconnect=Interconnect(links=7, link_bw=64e9),
     cycle_table=_table(MI300_CYCLES),
+    vmem_bytes=32 << 20,     # per-XCD L2 + Infinity Cache staging slice
 )
 
 # TPU v5e: 197 bf16 TFLOP/s/chip = 2 * mxu_count * 128^2 * clock.
@@ -108,6 +110,7 @@ TPU_V5E = DeviceSpec(
     # further — we stay conservative.
     interconnect=Interconnect(links=2, link_bw=50e9),
     peak_flops=197e12,
+    vmem_bytes=16 << 20,     # ~16 MiB VMEM per core feeds the MXUs
 )
 
 # ---------------------------------------------------------------------------

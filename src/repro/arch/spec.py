@@ -163,6 +163,12 @@ class DeviceSpec:
     # -- TPU-analytic matrix units (0 => MFMA cycle-table device) --------
     mxu_count: int = 0
     mxu_dim: int = 128
+    # -- fast on-chip tile budget in bytes (VMEM per TPU core; an L2 /
+    #    Infinity-Cache staging slice on cycle-table GPUs).  The kernel
+    #    tile planner (repro.kernels.plan) sizes block working sets
+    #    against this; 0 means "unspecified" and the planner falls back
+    #    to a conservative default.
+    vmem_bytes: int = 0
     # -- memory + interconnect ------------------------------------------
     memory: MemoryHierarchy = MemoryHierarchy()
     interconnect: Interconnect = Interconnect()

@@ -1,4 +1,5 @@
-"""Listing-1 microbenchmarks and the Eq. 1 latency extraction.
+"""Listing-1 microbenchmarks, Eq. 1 latency extraction, and the
+representative GEMM tile loops the scoreboard engine measures.
 
 ``build_listing1`` reconstructs the paper's inlined-assembly kernel as IR::
 
@@ -23,14 +24,18 @@ timing probe.
 
 from __future__ import annotations
 
+import math
 from typing import Dict, Iterable, Optional, Sequence
 
-from repro.core.machine import MachineModel
-from repro.core.program import (Program, mfma, s_memtime, s_nop, s_waitcnt)
-from repro.core.scoreboard import WFResult, simulate_program
+from repro.core import isa
+from repro.core.machine import MachineModel, as_machine
+from repro.core.program import (Program, Wavefront, Workload, mfma,
+                                s_memtime, s_nop, s_waitcnt)
+from repro.core.scoreboard import WFResult, simulate, simulate_program
 
 __all__ = ["build_listing1", "t_total", "eq1_latency", "measure_latency",
-           "latency_table"]
+           "latency_table", "gemm_stream", "simulate_gemm_cu",
+           "plan_microops", "measure_plan_throughput"]
 
 
 def build_listing1(instr_name: str, n_mfma: int, *, padding_nops: int = 0) -> Program:
@@ -78,3 +83,67 @@ def latency_table(machine: MachineModel,
         instr_names = machine.supported_instructions(validated_only=True)
     return {name: {n: measure_latency(machine, name, n) for n in n_range}
             for name in instr_names}
+
+
+# ---------------------------------------------------------------------------
+# Representative GEMM tile loops (the scoreboard engine's measurement path)
+# ---------------------------------------------------------------------------
+
+def gemm_stream(instr_name: str, n_tiles: int, wf_id: int) -> Program:
+    """Independent MFMA tiles for one WF (software-pipelined: no dep chain)."""
+    return [mfma(instr_name, d=f"acc{t}", a=f"a{t}", b=f"b{t}", c=f"acc{t}")
+            for t in range(n_tiles)]
+
+
+def simulate_gemm_cu(machine: MachineModel, instr_name: str, *,
+                     tiles_per_wf: int = 8, n_wf: int = 8) -> Dict[str, float]:
+    """Simulate one CU running a GEMM tile loop across n_wf wavefronts.
+
+    WFs are assigned round-robin to SIMD units; with n_wf >= simd_per_cu the
+    analytic throughput (mce_per_cu MFMAs per mfma_cycles) should be reached.
+    """
+    machine = as_machine(machine)
+    wfs = [Wavefront(w, gemm_stream(instr_name, tiles_per_wf, w),
+                     cu=0, simd=w % machine.simd_per_cu)
+           for w in range(n_wf)]
+    res = simulate(machine, Workload(wfs))
+    total_mfma = tiles_per_wf * n_wf
+    lat = machine.mfma_cycles(instr_name)
+    analytic = total_mfma * lat / min(n_wf, machine.mce_per_cu)
+    return {"makespan": res.makespan, "analytic_cycles": analytic,
+            "mce_utilization": res.mce_utilization(machine),
+            "total_mfma": total_mfma}
+
+
+def plan_microops(plan, instr_name: str) -> int:
+    """MFMA micro-ops covering ONE (block_m, block_n, block_k) plan tile.
+
+    ``plan`` is a :class:`repro.kernels.plan.TilePlan` for a GEMM-shaped
+    kernel — the same object the Pallas kernel executes, so the simulated
+    stream and the real tile loop cover identical work.
+    """
+    i = isa.lookup(instr_name)
+    b = plan.blocks
+    tiles = (math.ceil(b["block_m"] / i.m) * math.ceil(b["block_n"] / i.n)
+             * math.ceil(b["block_k"] / i.k))
+    return math.ceil(tiles / i.blocks)
+
+
+def measure_plan_throughput(machine: MachineModel, instr_name: str, plan, *,
+                            max_tiles_per_wf: int = 16) -> Dict[str, float]:
+    """Measured per-CU throughput for one plan tile at full occupancy.
+
+    One WF per MCE; each WF's stream is its share of the plan tile's
+    micro-ops, capped at ``max_tiles_per_wf`` (measured cycles/MFMA
+    converges well before that — the cap bounds event-sim cost, not
+    fidelity).  Returns the ``simulate_gemm_cu`` dict plus the per-WF
+    stream length actually simulated."""
+    machine = as_machine(machine)
+    n_wf = machine.mce_per_cu
+    per_wf = max(1, min(max_tiles_per_wf,
+                        math.ceil(plan_microops(plan, instr_name) / n_wf)))
+    out = simulate_gemm_cu(machine, instr_name, tiles_per_wf=per_wf,
+                           n_wf=n_wf)
+    out["tiles_per_wf"] = per_wf
+    out["cycles_per_mfma_cu"] = out["makespan"] / out["total_mfma"]
+    return out

@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""The Pallas compute layer: MFMA-contract kernels on the MXU.
+
+Five kernels (``mfma_gemm``, ``moe_gmm``, ``flash_attention``,
+``decode_attention``, ``mamba2_ssd``), each with a pure-jnp oracle in
+``ref.py``.  All Pallas/TPU version differences are absorbed by
+``compat``; all tile selection is derived from the device registry by
+``plan`` (``plan_for`` + the kernel catalog).  Call through ``ops`` —
+the wrappers resolve plans and interpret mode.
+"""
+
+from repro.kernels.plan import (KernelEntry, TilePlan, UnknownKernelError,
+                                get_kernel, list_kernels, plan_for,
+                                register_kernel)
+
+__all__ = ["KernelEntry", "TilePlan", "UnknownKernelError", "get_kernel",
+           "list_kernels", "plan_for", "register_kernel"]

@@ -1,0 +1,96 @@
+"""Version-adaptive Pallas/TPU shim: the ONE place that touches ``pltpu``.
+
+JAX has renamed pieces of the Pallas TPU surface across the 0.4.x line —
+most notably the compiler-parameters dataclass, spelled
+``pltpu.TPUCompilerParams`` up to ~0.4.3x and ``pltpu.CompilerParams``
+afterwards.  Every kernel in ``repro.kernels`` used to call one spelling
+directly, so an unpinned ``jax[cpu]`` silently killed the whole compute
+layer with ``AttributeError`` at trace time (34 red tests).
+
+All five kernels now route through this module instead:
+
+* :func:`tpu_compiler_params` — dimension-semantics compiler params under
+  either spelling, with a clear error naming the installed JAX version if
+  neither exists;
+* :func:`vmem` / :func:`smem_block_spec` — VMEM scratch shapes and
+  SMEM-resident block specs;
+* :func:`default_interpret` / :func:`resolve_interpret` — backend
+  detection for interpret-mode-on-CPU (the container has no TPU; the same
+  call sites compile to Mosaic on real hardware).
+
+Nothing outside this file may import ``jax.experimental.pallas.tpu``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "PallasCompatError",
+    "tpu_compiler_params",
+    "vmem",
+    "smem_block_spec",
+    "default_interpret",
+    "resolve_interpret",
+]
+
+#: Spellings of the TPU compiler-params dataclass, newest first.
+_COMPILER_PARAMS_NAMES = ("CompilerParams", "TPUCompilerParams")
+
+
+class PallasCompatError(RuntimeError):
+    """The installed JAX exposes none of the known Pallas TPU spellings."""
+
+
+def _compiler_params_cls():
+    for name in _COMPILER_PARAMS_NAMES:
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    raise PallasCompatError(
+        f"jax {jax.__version__}: jax.experimental.pallas.tpu exposes "
+        f"neither of {_COMPILER_PARAMS_NAMES} — repro.kernels supports "
+        "jax>=0.4.30,<0.5 (see requirements.txt); install a version in "
+        "that range or add the new spelling to repro.kernels.compat")
+
+
+def tpu_compiler_params(*, dimension_semantics: Sequence[str]):
+    """Compiler params carrying ``dimension_semantics`` for a grid.
+
+    Each entry is ``"parallel"`` (grid dimension may be executed in any
+    order / in parallel) or ``"arbitrary"`` (sequential — carries VMEM
+    scratch state across steps, e.g. a K loop's accumulator).
+    """
+    return _compiler_params_cls()(
+        dimension_semantics=tuple(dimension_semantics))
+
+
+def vmem(shape: Tuple[int, ...], dtype):
+    """A VMEM scratch buffer spec (``scratch_shapes=`` entry)."""
+    return pltpu.VMEM(shape, dtype)
+
+
+def smem_block_spec(block_shape: Optional[Tuple[int, ...]] = None,
+                    index_map=None) -> pl.BlockSpec:
+    """A BlockSpec placing the operand in SMEM (scalars / tiny tables)."""
+    if block_shape is None and index_map is None:
+        return pl.BlockSpec(memory_space=pltpu.SMEM)
+    return pl.BlockSpec(block_shape, index_map, memory_space=pltpu.SMEM)
+
+
+def default_interpret() -> bool:
+    """True when there is no TPU backend: run kernels in interpret mode
+    (the kernel body executes in Python per grid step — correctness-exact,
+    not performance-shaped)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> auto-detect; an explicit bool wins."""
+    if interpret is None:
+        return default_interpret()
+    return interpret

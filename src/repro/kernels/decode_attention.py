@@ -16,7 +16,9 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+from repro.kernels.plan import validate_tiling
 
 __all__ = ["decode_attention"]
 
@@ -61,18 +63,20 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                     kv_len: jax.Array, *, block_kv: int = 512,
+                     kv_len: jax.Array, *, block_kv: int,
                      interpret: bool = False) -> jax.Array:
     """q: (B, H, hd); k/v: (B, T, KV, hd); kv_len: scalar int32.
 
     Returns (B, H, hd) attention output over cache positions < kv_len.
+    ``block_kv`` must be an MXU-aligned divisor of the cache length T
+    (derive it with ``repro.kernels.plan.plan_for``).
     """
     B, H, hd = q.shape
     T, KV = k.shape[1], k.shape[2]
     G = H // KV
     scale = 1.0 / math.sqrt(hd)
-    block_kv = min(block_kv, T)
-    assert T % block_kv == 0
+    validate_tiling("decode_attention", {"T": (T, block_kv)},
+                    depth_dims=(), block_names={"T": "block_kv"})
 
     qf = q.reshape(B, KV, G, hd).reshape(B * KV, G, hd)
     kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
@@ -85,7 +89,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                           block_kv=block_kv),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
+            compat.smem_block_spec(),
             pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
             pl.BlockSpec((1, block_kv, hd), lambda b, j: (b, j, 0)),
             pl.BlockSpec((1, block_kv, hd), lambda b, j: (b, j, 0)),
@@ -93,11 +97,11 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         out_specs=pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, hd), jnp.float32),
+            compat.vmem((G, 1), jnp.float32),
+            compat.vmem((G, 1), jnp.float32),
+            compat.vmem((G, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(lens, qf, kf, vf)

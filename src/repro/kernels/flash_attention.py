@@ -18,7 +18,9 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+from repro.kernels.plan import validate_tiling
 
 __all__ = ["flash_attention"]
 
@@ -72,20 +74,22 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
                                              "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, block_q: int = 512,
-                    block_kv: int = 512, interpret: bool = False) -> jax.Array:
+                    causal: bool = True, block_q: int,
+                    block_kv: int, interpret: bool = False) -> jax.Array:
     """q: (B, S, H, hd); k/v: (B, T, KV, hd) with H = KV*G -> (B, S, H, hd).
 
-    Requires S % block_q == 0 and T % block_kv == 0 (production shapes are
-    powers of two; the XLA path handles ragged tails).
+    ``block_q``/``block_kv`` must be MXU-aligned divisors of S/T (derive
+    them with ``repro.kernels.plan.plan_for``; the XLA path handles
+    ragged tails).
     """
     B, S, H, hd = q.shape
     T, KV = k.shape[1], k.shape[2]
     G = H // KV
     scale = 1.0 / math.sqrt(hd)
-    block_q = min(block_q, S)
-    block_kv = min(block_kv, T)
-    assert S % block_q == 0 and T % block_kv == 0
+    validate_tiling("flash_attention", {"S": (S, block_q),
+                                        "T": (T, block_kv)},
+                    depth_dims=(),
+                    block_names={"S": "block_q", "T": "block_kv"})
 
     # (B, S, KV, G, hd) -> flat (B*KV*G, S, hd) query-major layout
     qf = q.reshape(B, S, KV, G, hd).transpose(0, 2, 3, 1, 4) \
@@ -109,11 +113,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B * KV * G, S, hd), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
-            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
-            pltpu.VMEM((block_q, hd), jnp.float32),  # accumulator
+            compat.vmem((block_q, 1), jnp.float32),   # running max
+            compat.vmem((block_q, 1), jnp.float32),   # running denom
+            compat.vmem((block_q, hd), jnp.float32),  # accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)

@@ -19,7 +19,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+from repro.kernels.plan import SUBLANE, validate_tiling
 
 __all__ = ["mamba2_ssd"]
 
@@ -71,14 +73,19 @@ def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, hout_ref,
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def mamba2_ssd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
-               Cm: jax.Array, *, chunk: int = 256,
+               Cm: jax.Array, *, chunk: int,
                interpret: bool = False):
     """x (B,S,nh,hd); dt (B,S,nh) f32 post-softplus; A (nh,) f32 negative;
-    Bm/Cm (B,S,G,ds).  Returns (y (B,S,nh,hd), state (B,nh,hd,ds) f32)."""
+    Bm/Cm (B,S,G,ds).  Returns (y (B,S,nh,hd), state (B,nh,hd,ds) f32).
+
+    ``chunk`` must be a sublane-aligned divisor of S (the chunked SSD
+    algebra is exact at any chunk; derive one with
+    ``repro.kernels.plan.plan_for``)."""
     B, S, nh, hd = x.shape
     G, ds = Bm.shape[2], Bm.shape[3]
     hpg = nh // G
-    assert S % chunk == 0
+    validate_tiling("mamba2_ssd", {"S": (S, chunk)}, depth_dims=(),
+                    block_names={"S": "chunk"}, quantum=SUBLANE)
     n_chunks = S // chunk
     grid = (B, nh, n_chunks)
 
@@ -86,8 +93,7 @@ def mamba2_ssd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
         functools.partial(_ssd_kernel, n_chunks=n_chunks, chunk=chunk),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0),
-                         memory_space=pltpu.SMEM),
+            compat.smem_block_spec((1, 1), lambda b, h, c: (h, 0)),
             pl.BlockSpec((1, chunk, 1, hd), lambda b, h, c: (b, c, h, 0)),
             pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
             pl.BlockSpec((1, chunk, 1, ds), lambda b, h, c: (b, c, h // hpg, 0)),
@@ -101,8 +107,8 @@ def mamba2_ssd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
             jax.ShapeDtypeStruct((B, S, nh, hd), x.dtype),
             jax.ShapeDtypeStruct((B, nh, hd, ds), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.vmem((hd, ds), jnp.float32)],
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(A.reshape(nh, 1).astype(jnp.float32), x, dt, Bm, Cm)

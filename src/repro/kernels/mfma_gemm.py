@@ -20,7 +20,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+from repro.kernels.plan import validate_tiling
 
 __all__ = ["mfma_gemm"]
 
@@ -43,23 +45,24 @@ def _gemm_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, n_k: int):
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "interpret"))
 def mfma_gemm(a: jax.Array, b: jax.Array, c: jax.Array, *,
-              block_m: int = 256, block_n: int = 256, block_k: int = 512,
+              block_m: int, block_n: int, block_k: int,
               interpret: bool = False) -> jax.Array:
     """a: (M, K), b: (K, N), c: (M, N) -> c + a @ b (f32 accumulation).
 
-    Block sizes must be MXU-aligned (multiples of 128) and divide the
-    operand dims; VMEM footprint = bm*bk + bk*bn (operands) + 2*bm*bn
-    (C tile + f32 accumulator), ~0.9 MiB at the defaults in bf16.
+    Block sizes must be MXU-aligned (multiples of 128; block_k may be one
+    full-depth step) and divide the operand dims — derive them with
+    ``repro.kernels.plan.plan_for`` or call via ``repro.kernels.ops``.
+    VMEM footprint = bm*bk + bk*bn (operands) + 2*bm*bn (C tile + f32
+    accumulator).
     """
     M, K = a.shape
     K2, N = b.shape
-    assert K == K2 and c.shape == (M, N), (a.shape, b.shape, c.shape)
-    block_m = min(block_m, M)
-    block_n = min(block_n, N)
-    block_k = min(block_k, K)
-    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
-        "dims must be divisible by block sizes", (M, N, K),
-        (block_m, block_n, block_k))
+    if K != K2 or c.shape != (M, N):
+        raise ValueError(
+            f"mfma_gemm: incompatible operands a{a.shape} @ b{b.shape} "
+            f"+ c{c.shape}; need a(M,K), b(K,N), c(M,N)")
+    validate_tiling("mfma_gemm", {"M": (M, block_m), "N": (N, block_n),
+                                  "K": (K, block_k)})
     n_k = K // block_k
     grid = (M // block_m, N // block_n, n_k)
     return pl.pallas_call(
@@ -72,8 +75,8 @@ def mfma_gemm(a: jax.Array, b: jax.Array, c: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), c.dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.vmem((block_m, block_n), jnp.float32)],
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, c)

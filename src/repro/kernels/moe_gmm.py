@@ -14,7 +14,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+from repro.kernels.plan import validate_tiling
 
 __all__ = ["moe_gmm"]
 
@@ -37,17 +39,25 @@ def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "interpret"))
-def moe_gmm(x: jax.Array, w: jax.Array, *, block_m: int = 128,
-            block_n: int = 128, block_k: int = 512,
+def moe_gmm(x: jax.Array, w: jax.Array, *, block_m: int,
+            block_n: int, block_k: int,
             interpret: bool = False) -> jax.Array:
-    """x: (E, C, K), w: (E, K, N) -> (E, C, N) with f32 accumulation."""
+    """x: (E, C, K), w: (E, K, N) -> (E, C, N) with f32 accumulation.
+
+    Blocks tile the per-expert (C, K) @ (K, N) matmul and must be
+    MXU-aligned divisors of C/N/K (block_k may be one full-depth step) —
+    derive them with ``repro.kernels.plan.plan_for``.
+    """
     E, C, K = x.shape
     E2, K2, N = w.shape
-    assert E == E2 and K == K2
-    block_m = min(block_m, C)
-    block_n = min(block_n, N)
-    block_k = min(block_k, K)
-    assert C % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    if E != E2 or K != K2:
+        raise ValueError(
+            f"moe_gmm: incompatible operands x{x.shape} @ w{w.shape}; "
+            "need x(E, C, K) and w(E, K, N) with matching expert count E "
+            "and contraction depth K")
+    validate_tiling("moe_gmm", {"C": (C, block_m), "N": (N, block_n),
+                                "K": (K, block_k)},
+                    block_names={"C": "block_m"})
     n_k = K // block_k
     grid = (E, C // block_m, N // block_n, n_k)
     return pl.pallas_call(
@@ -60,8 +70,8 @@ def moe_gmm(x: jax.Array, w: jax.Array, *, block_m: int = 128,
         out_specs=pl.BlockSpec((1, block_m, block_n),
                                lambda e, i, j, k: (e, i, j)),
         out_shape=jax.ShapeDtypeStruct((E, C, N), x.dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.vmem((block_m, block_n), jnp.float32)],
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

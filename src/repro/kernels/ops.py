@@ -1,57 +1,108 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""jit'd public wrappers for the Pallas kernels — plan-driven.
 
-On CPU (this container) the kernels execute in interpret mode — the kernel
-body runs in Python per grid step, validating correctness; on a real TPU
-backend the same call sites compile to Mosaic.  ``interpret=None`` (the
-default) auto-detects.
+Tile sizes are no longer hard-coded per call site: each wrapper derives a
+:class:`~repro.kernels.plan.TilePlan` from the operand shapes and the
+target :class:`~repro.arch.DeviceSpec` (``device=`` may be a registry
+name, a spec, or a machine; ``None`` plans for the default TPU).  A
+caller can pass a precomputed ``plan=`` (e.g. the one a perf engine
+reported) or pin individual blocks (``block_m=...``), which are validated
+by the same alignment contract the planner enforces.
+
+On CPU (this container) the kernels execute in interpret mode — the
+kernel body runs in Python per grid step, validating correctness; on a
+real TPU backend the same call sites compile to Mosaic.
+``interpret=None`` (the default) auto-detects via ``repro.kernels.compat``.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, Mapping, Optional
 
-import jax
-
-from repro.kernels import (decode_attention as _da, flash_attention as _fa,
-                           mamba2_ssd as _ssd, mfma_gemm as _gemm,
-                           moe_gmm as _gmm)
+from repro.kernels import (compat, decode_attention as _da,
+                           flash_attention as _fa, mamba2_ssd as _ssd,
+                           mfma_gemm as _gemm, moe_gmm as _gmm)
+from repro.kernels.plan import TilePlan, plan_for
 
 __all__ = ["mfma_gemm", "flash_attention", "decode_attention", "mamba2_ssd",
            "moe_gmm"]
 
 
-def _interp(interpret: Optional[bool]) -> bool:
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+def _blocks(kernel: str, plan: Optional[TilePlan],
+            shapes: Mapping[str, int], dtype, device,
+            overrides: Dict[str, Optional[int]]) -> Dict[str, int]:
+    """Resolve the block kwargs: explicit plan > pinned blocks > planner."""
+    if plan is not None:
+        if plan.kernel != kernel:
+            raise ValueError(f"{kernel}: got a plan for {plan.kernel!r}; "
+                             f"derive one with plan_for({kernel!r}, ...)")
+        blocks = plan.kwargs()
+        blocks.update({k: v for k, v in overrides.items() if v is not None})
+        return blocks
+    return plan_for(kernel, shapes, dtype=dtype, device=device,
+                    **overrides).kwargs()
 
 
-def mfma_gemm(a, b, c, *, block_m=256, block_n=256, block_k=512,
+def mfma_gemm(a, b, c, *, device=None, plan: Optional[TilePlan] = None,
+              block_m: Optional[int] = None, block_n: Optional[int] = None,
+              block_k: Optional[int] = None,
               interpret: Optional[bool] = None):
-    return _gemm.mfma_gemm(a, b, c, block_m=block_m, block_n=block_n,
-                           block_k=block_k, interpret=_interp(interpret))
+    blocks = _blocks("mfma_gemm", plan,
+                     {"M": a.shape[0], "N": b.shape[1], "K": a.shape[1]},
+                     a.dtype, device,
+                     dict(block_m=block_m, block_n=block_n, block_k=block_k))
+    return _gemm.mfma_gemm(a, b, c, **blocks,
+                           interpret=compat.resolve_interpret(interpret))
 
 
-def flash_attention(q, k, v, *, causal=True, block_q=512, block_kv=512,
+def flash_attention(q, k, v, *, causal=True, device=None,
+                    plan: Optional[TilePlan] = None,
+                    block_q: Optional[int] = None,
+                    block_kv: Optional[int] = None,
                     interpret: Optional[bool] = None):
-    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
-                               block_kv=block_kv,
-                               interpret=_interp(interpret))
+    B, S, H, hd = q.shape
+    blocks = _blocks("flash_attention", plan,
+                     {"B": B, "S": S, "T": k.shape[1], "H": H,
+                      "KV": k.shape[2], "hd": hd},
+                     q.dtype, device,
+                     dict(block_q=block_q, block_kv=block_kv))
+    return _fa.flash_attention(q, k, v, causal=causal, **blocks,
+                               interpret=compat.resolve_interpret(interpret))
 
 
-def decode_attention(q, k, v, kv_len, *, block_kv=512,
+def decode_attention(q, k, v, kv_len, *, device=None,
+                     plan: Optional[TilePlan] = None,
+                     block_kv: Optional[int] = None,
                      interpret: Optional[bool] = None):
-    return _da.decode_attention(q, k, v, kv_len, block_kv=block_kv,
-                                interpret=_interp(interpret))
+    B, H, hd = q.shape
+    blocks = _blocks("decode_attention", plan,
+                     {"B": B, "T": k.shape[1], "H": H, "KV": k.shape[2],
+                      "hd": hd},
+                     q.dtype, device, dict(block_kv=block_kv))
+    return _da.decode_attention(q, k, v, kv_len, **blocks,
+                                interpret=compat.resolve_interpret(interpret))
 
 
-def mamba2_ssd(x, dt, A, Bm, Cm, *, chunk=256,
+def mamba2_ssd(x, dt, A, Bm, Cm, *, device=None,
+               plan: Optional[TilePlan] = None,
+               chunk: Optional[int] = None,
                interpret: Optional[bool] = None):
-    return _ssd.mamba2_ssd(x, dt, A, Bm, Cm, chunk=chunk,
-                           interpret=_interp(interpret))
+    B, S, nh, hd = x.shape
+    blocks = _blocks("mamba2_ssd", plan,
+                     {"B": B, "S": S, "nh": nh, "hd": hd,
+                      "ds": Bm.shape[3]},
+                     x.dtype, device, dict(chunk=chunk))
+    return _ssd.mamba2_ssd(x, dt, A, Bm, Cm, **blocks,
+                           interpret=compat.resolve_interpret(interpret))
 
 
-def moe_gmm(x, w, *, block_m=128, block_n=128, block_k=512,
+def moe_gmm(x, w, *, device=None, plan: Optional[TilePlan] = None,
+            block_m: Optional[int] = None, block_n: Optional[int] = None,
+            block_k: Optional[int] = None,
             interpret: Optional[bool] = None):
-    return _gmm.moe_gmm(x, w, block_m=block_m, block_n=block_n,
-                        block_k=block_k, interpret=_interp(interpret))
+    E, C, K = x.shape
+    blocks = _blocks("moe_gmm", plan,
+                     {"E": E, "C": C, "K": K, "N": w.shape[2]},
+                     x.dtype, device,
+                     dict(block_m=block_m, block_n=block_n, block_k=block_k))
+    return _gmm.moe_gmm(x, w, **blocks,
+                        interpret=compat.resolve_interpret(interpret))

@@ -31,8 +31,10 @@ from typing import Dict, List, Optional, Protocol, Sequence, Tuple
 from repro.arch import select as arch_select
 from repro.core import isa
 from repro.core.machine import MachineModel, as_machine
-from repro.core.program import Program, Wavefront, Workload, mfma
-from repro.core.scoreboard import simulate
+# the representative-tile measurement path lives with the other
+# microbenchmarks; re-exported here for legacy call sites
+from repro.core.microbench import (gemm_stream, measure_plan_throughput,
+                                   simulate_gemm_cu)
 from repro.perf.hlo_ir import KernelGraph
 from repro.perf.report import OpCost, Report
 
@@ -40,6 +42,7 @@ __all__ = [
     "CostEngine", "RooflineEngine", "MfmaAnalyticEngine", "ScoreboardEngine",
     "best_instr", "mfma_count", "cost_dot_pairs", "DotCosts",
     "bound_time", "roofline_times", "gemm_stream", "simulate_gemm_cu",
+    "plan_for_dot", "plan_for_graph",
 ]
 
 
@@ -181,33 +184,40 @@ def roofline_times(flops: float, nbytes: float, wire_bytes: float,
 
 
 # ---------------------------------------------------------------------------
-# Representative-loop simulation (moved from repro.core.hlo_bridge)
+# Tile planning for arbitrary HLO dots (the execution layer's planner)
 # ---------------------------------------------------------------------------
 
-def gemm_stream(instr_name: str, n_tiles: int, wf_id: int) -> Program:
-    """Independent MFMA tiles for one WF (software-pipelined: no dep chain)."""
-    return [mfma(instr_name, d=f"acc{t}", a=f"a{t}", b=f"b{t}", c=f"acc{t}")
-            for t in range(n_tiles)]
-
-
-def simulate_gemm_cu(machine: MachineModel, instr_name: str, *,
-                     tiles_per_wf: int = 8, n_wf: int = 8) -> Dict[str, float]:
-    """Simulate one CU running a GEMM tile loop across n_wf wavefronts.
-
-    WFs are assigned round-robin to SIMD units; with n_wf >= simd_per_cu the
-    analytic throughput (mce_per_cu MFMAs per mfma_cycles) should be reached.
-    """
+def plan_for_dot(machine, d, fallback_dtype: str = "bf16"):
+    """The :class:`~repro.kernels.plan.TilePlan` the ``mfma_gemm`` kernel
+    would execute for one HLO dot on ``machine`` — dims padded to the
+    alignment quantum, exactly modelling padded execution.  This is the
+    SAME planner the ops layer runs, so predicted and executed tiles can
+    be cross-checked (``Report.plan``).  A dot dtype the planner cannot
+    size falls back to ``fallback_dtype``, mirroring ``best_instr``;
+    genuine planning failures (e.g. a what-if device whose fast memory
+    cannot hold one aligned tile set) propagate as ``ValueError``."""
+    from repro.kernels.plan import UnknownDtypeError, plan_for
     machine = as_machine(machine)
-    wfs = [Wavefront(w, gemm_stream(instr_name, tiles_per_wf, w),
-                     cu=0, simd=w % machine.simd_per_cu)
-           for w in range(n_wf)]
-    res = simulate(machine, Workload(wfs))
-    total_mfma = tiles_per_wf * n_wf
-    lat = machine.mfma_cycles(instr_name)
-    analytic = total_mfma * lat / min(n_wf, machine.mce_per_cu)
-    return {"makespan": res.makespan, "analytic_cycles": analytic,
-            "mce_utilization": res.mce_utilization(machine),
-            "total_mfma": total_mfma}
+    shapes = {"M": d.m, "N": d.n, "K": d.k}
+    try:
+        return plan_for("mfma_gemm", shapes, dtype=d.in_dtype,
+                        device=machine, pad=True)
+    except UnknownDtypeError:
+        return plan_for("mfma_gemm", shapes, dtype=fallback_dtype,
+                        device=machine, pad=True)
+
+
+def plan_for_graph(graph: KernelGraph, machine) -> Optional[Dict]:
+    """Plan dict for the module's dominant (most-FLOPs) dot, or None for
+    a dot-free / totals-only graph."""
+    pairs = graph.dot_pairs()
+    if not pairs:
+        return None
+    d, _ = max(pairs, key=lambda p: p[0].flops * p[1])
+    try:
+        return plan_for_dot(machine, d).as_dict()
+    except ValueError:
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -313,38 +323,51 @@ class ScoreboardEngine:
     """Event-driven validation: representative tile loops through the
     NRDY_MATRIX_CORE simulator, extrapolated to the module.
 
-    Per instruction in the module's mix, a full-occupancy GEMM tile loop
-    (one WF per SIMD, ``tiles_per_wf`` independent MFMAs each) is lowered
-    to ``repro.core.program`` IR and simulated; the measured cycles/MFMA —
-    which include issue overhead the analytic model ignores — replace the
-    tabled latency in the throughput extrapolation.  MXU (table-less)
-    devices have no instruction stream to simulate and fall back to the
-    analytic pass model, flagged in ``metrics["simulated"]``.
+    Per dot, the engine derives the SAME :class:`TilePlan` the
+    ``mfma_gemm`` Pallas kernel would execute (``plan_for_dot``: dims
+    padded to the device's alignment quantum, blocks VMEM-budgeted) and
+    simulates a full-occupancy slice of that tile — one WF per MCE, each
+    WF's stream its share of the plan tile's MFMA micro-ops (capped at
+    ``max_tiles_per_wf``; cycles/MFMA converges well before the cap).
+    The measured cycles/MFMA — which include issue overhead the analytic
+    model ignores — replace the tabled latency in the throughput
+    extrapolation.  MXU (table-less) devices have no instruction stream
+    to simulate and fall back to the analytic pass model, flagged in
+    ``metrics["simulated"]``.  ``Report.plan`` records the dominant
+    dot's plan for cross-checking against the executed tiles.
     """
 
     name = "scoreboard"
 
-    def __init__(self, *, tiles_per_wf: int = 16,
+    def __init__(self, *, max_tiles_per_wf: int = 16,
                  fallback_dtype: str = "bf16"):
-        self.tiles_per_wf = tiles_per_wf
+        self.max_tiles_per_wf = max_tiles_per_wf
         self.fallback_dtype = fallback_dtype
         self._measured: Dict[Tuple, Dict[str, float]] = {}
 
-    def _measure(self, machine: MachineModel, instr: str) -> Dict[str, float]:
-        """Measured per-CU throughput for one instruction (memoised on the
-        timing-relevant machine state, so overlay sweeps re-simulate only
-        when a knob actually changes the stream's timing)."""
-        key = (instr, machine.mfma_cycles(instr), machine.t_inst,
+    def _measure(self, machine: MachineModel, instr: str,
+                 plan) -> Dict[str, float]:
+        """Measured per-CU throughput for one (instruction, plan tile)
+        (memoised on the timing-relevant machine state, so overlay sweeps
+        re-simulate only when a knob actually changes the timing).
+        ``plan=None`` (unplannable dot) measures a fixed-length stream."""
+        blocks = tuple(sorted(plan.blocks.items())) if plan is not None \
+            else None
+        key = (instr, blocks, machine.mfma_cycles(instr), machine.t_inst,
                machine.simd_per_cu, machine.mce_per_cu)
         hit = self._measured.get(key)
         if hit is not None:
             return hit
-        n_wf = machine.mce_per_cu          # one WF per SIMD: full occupancy
-        res = simulate_gemm_cu(machine, instr, tiles_per_wf=self.tiles_per_wf,
-                               n_wf=n_wf)
-        out = {"cycles_per_mfma_cu": res["makespan"] / res["total_mfma"],
-               "mce_utilization": res["mce_utilization"],
-               "makespan": res["makespan"]}
+        if plan is None:
+            out = simulate_gemm_cu(machine, instr,
+                                   tiles_per_wf=self.max_tiles_per_wf,
+                                   n_wf=machine.mce_per_cu)
+            out["tiles_per_wf"] = self.max_tiles_per_wf
+            out["cycles_per_mfma_cu"] = out["makespan"] / out["total_mfma"]
+        else:
+            out = measure_plan_throughput(
+                machine, instr, plan,
+                max_tiles_per_wf=self.max_tiles_per_wf)
         self._measured[key] = out
         return out
 
@@ -357,19 +380,30 @@ class ScoreboardEngine:
             metrics = dict(rep.metrics)
             metrics["simulated"] = 0.0
             return dataclasses.replace(rep, engine=self.name,
-                                       metrics=metrics)
+                                       metrics=metrics,
+                                       plan=plan_for_graph(graph, machine))
 
         clock_hz = machine.clock_mhz * 1e6
         total_cycles = total_mfma = matrix_flops = 0.0
         util_acc = util_w = 0.0
+        best_plan = None
+        best_flops = -1.0
         per_op: List[OpCost] = []
         for d, cnt in graph.dot_pairs():
             instr = best_instr(machine, d.in_dtype) or best_instr(machine, {
                 "bf16": "bf16", "f16": "f16"}.get(self.fallback_dtype, "f32"))
             if instr is None:
                 continue
+            try:
+                plan = plan_for_dot(machine, d)
+            except ValueError:
+                plan = None     # unplannable (e.g. tiny what-if VMEM):
+                                # degrade to the fixed stream, plan column
+                                # stays empty like the other engines
+            if plan is not None and cnt * d.flops > best_flops:
+                best_flops, best_plan = cnt * d.flops, plan
             n = mfma_count(d, instr)
-            meas = self._measure(machine, instr)
+            meas = self._measure(machine, instr, plan)
             # chip-level: every CU runs the measured stream concurrently
             op_cycles = cnt * n * meas["cycles_per_mfma_cu"] / machine.cu_count
             total_cycles += op_cycles
@@ -381,13 +415,17 @@ class ScoreboardEngine:
                 label=f"dot[{d.batch}x{d.m}x{d.n}x{d.k}]{d.in_dtype}",
                 kind="dot", time_s=op_cycles / clock_hz, count=float(cnt),
                 flops=float(cnt * d.flops),
-                detail=f"{instr} {meas['cycles_per_mfma_cu']:.1f}cy/mfma"))
+                detail=f"{instr} {meas['cycles_per_mfma_cu']:.1f}cy/mfma"
+                       + (f" tile {plan.blocks['block_m']}x"
+                          f"{plan.blocks['block_n']}x"
+                          f"{plan.blocks['block_k']}" if plan else "")))
         time_s = total_cycles / clock_hz
         return Report(
             engine=self.name, device=machine.name,
             total_time_s=time_s, compute_time_s=time_s, bound="matrix",
             utilization=util_acc / util_w if util_w else 0.0,
             per_op=per_op,
+            plan=best_plan.as_dict() if best_plan is not None else None,
             metrics={"total_mfma": int(total_mfma),
                      "mce_cycles": total_cycles,
                      "matrix_flops": matrix_flops,

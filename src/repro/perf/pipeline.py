@@ -86,10 +86,19 @@ def as_graph(workload, *, tpu_correct: bool = True) -> KernelGraph:
 def _reports_for(graph: KernelGraph, base: MachineModel, eng: CostEngine,
                  overlays: Iterable[Overlay], name: str) -> List[Report]:
     import dataclasses
+
+    from repro.perf.engines import plan_for_graph
     out = []
+    plan = None
     for ov in overlays:
         machine = base if ov.is_identity else base.with_overlay(ov)
         rep = eng.estimate(graph, machine)
+        if rep.plan is None:
+            # every engine reports the tiles the kernel layer would run
+            # (overlay knobs scale timing, not the spec's tile geometry)
+            if plan is None:
+                plan = plan_for_graph(graph, base)
+            rep = dataclasses.replace(rep, plan=plan)
         out.append(dataclasses.replace(rep, scenario=ov.describe(),
                                        workload=name))
     return out

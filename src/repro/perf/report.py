@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 __all__ = ["OpCost", "Report", "format_reports"]
 
@@ -47,10 +47,22 @@ class Report:
     bound: str = "compute"               # dominant term, from BOUNDS
     utilization: float = 0.0             # achieved/peak at the bottleneck
     per_op: Sequence[OpCost] = ()
+    #: The dominant dot's TilePlan (``TilePlan.as_dict()``): the tiles the
+    #: mfma_gemm kernel would execute for this workload on this device —
+    #: lets predicted and executed tilings be cross-checked.
+    plan: Optional[Dict[str, Any]] = None
     metrics: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def top_ops(self, n: int = 5) -> List[OpCost]:
         return sorted(self.per_op, key=lambda o: -o.time_s)[:n]
+
+    def plan_summary(self) -> str:
+        """Compact "bm x bn x bk"-style rendering of the plan column."""
+        if not self.plan:
+            return "-"
+        blocks = [str(v) for k, v in self.plan.items()
+                  if k.startswith("block_") or k == "chunk"]
+        return "x".join(blocks) if blocks else "-"
 
     def as_dict(self) -> Dict[str, Any]:
         """JSON-able record (benchmark artifacts, CI trajectories)."""
@@ -80,14 +92,15 @@ def _us(t: float) -> str:
 def format_reports(reports: Sequence[Report]) -> str:
     """One row per report: the sweep-comparison table."""
     hdr = (f"| {'workload':20s} | {'device':10s} | {'engine':10s} "
-           f"| {'scenario':24s} | {'total':>10s} | {'bound':10s} | util |")
+           f"| {'scenario':24s} | {'total':>10s} | {'bound':10s} | util "
+           f"| {'plan':14s} |")
     sep = "|" + "-" * 22 + "|" + "-" * 12 + "|" + "-" * 12 + "|" + "-" * 26 \
-        + "|" + "-" * 12 + "|" + "-" * 12 + "|------|"
+        + "|" + "-" * 12 + "|" + "-" * 12 + "|------|" + "-" * 16 + "|"
     out = [hdr, sep]
     for r in reports:
         out.append(
             f"| {r.workload[:20]:20s} | {r.device[:10]:10s} "
             f"| {r.engine[:10]:10s} | {r.scenario[:24]:24s} "
             f"| {_us(r.total_time_s):>10s} | {r.bound:10s} "
-            f"| {r.utilization:4.2f} |")
+            f"| {r.utilization:4.2f} | {r.plan_summary()[:14]:14s} |")
     return "\n".join(out)

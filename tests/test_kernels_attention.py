@@ -26,7 +26,8 @@ def _qkv(B, S, T, H, KV, hd, dt):
 @pytest.mark.parametrize("dt", [jnp.bfloat16, jnp.float32])
 def test_flash_attention_sweep(B, S, H, KV, hd, dt):
     q, k, v = _qkv(B, S, S, H, KV, hd, dt)
-    y = ops.flash_attention(q, k, v, causal=True, block_q=64, block_kv=64)
+    y = ops.flash_attention(q, k, v, causal=True, block_q=128,
+                            block_kv=128)
     yr = ref.flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32), **TOL)
@@ -34,7 +35,8 @@ def test_flash_attention_sweep(B, S, H, KV, hd, dt):
 
 def test_flash_noncausal():
     q, k, v = _qkv(2, 128, 128, 4, 4, 32, jnp.float32)
-    y = ops.flash_attention(q, k, v, causal=False, block_q=64, block_kv=64)
+    y = ops.flash_attention(q, k, v, causal=False, block_q=128,
+                            block_kv=128)
     yr = ref.flash_attention_ref(q, k, v, causal=False)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
                                atol=1e-4)
@@ -43,8 +45,8 @@ def test_flash_noncausal():
 def test_flash_block_shape_invariance():
     """Result must not depend on the BlockSpec tiling."""
     q, k, v = _qkv(1, 256, 256, 4, 4, 64, jnp.float32)
-    y1 = ops.flash_attention(q, k, v, block_q=64, block_kv=64)
-    y2 = ops.flash_attention(q, k, v, block_q=128, block_kv=32)
+    y1 = ops.flash_attention(q, k, v, block_q=128, block_kv=128)
+    y2 = ops.flash_attention(q, k, v, block_q=256, block_kv=128)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
                                atol=1e-5)
 
@@ -55,7 +57,7 @@ def test_decode_attention_kv_len(kv_len):
     q = jnp.asarray(RNG.randn(B, H, hd), jnp.float32)
     k = jnp.asarray(RNG.randn(B, T, KV, hd), jnp.float32)
     v = jnp.asarray(RNG.randn(B, T, KV, hd), jnp.float32)
-    y = ops.decode_attention(q, k, v, jnp.int32(kv_len), block_kv=64)
+    y = ops.decode_attention(q, k, v, jnp.int32(kv_len), block_kv=128)
     yr = ref.decode_attention_ref(q, k, v, jnp.int32(kv_len))
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
                                atol=1e-4)
@@ -67,10 +69,10 @@ def test_decode_ignores_stale_cache():
     q = jnp.asarray(RNG.randn(B, H, hd), jnp.float32)
     k = jnp.asarray(RNG.randn(B, T, KV, hd), jnp.float32)
     v = jnp.asarray(RNG.randn(B, T, KV, hd), jnp.float32)
-    y1 = ops.decode_attention(q, k, v, jnp.int32(64), block_kv=64)
+    y1 = ops.decode_attention(q, k, v, jnp.int32(64), block_kv=128)
     k2 = k.at[:, 64:].set(1e4)
     v2 = v.at[:, 64:].set(-1e4)
-    y2 = ops.decode_attention(q, k2, v2, jnp.int32(64), block_kv=64)
+    y2 = ops.decode_attention(q, k2, v2, jnp.int32(64), block_kv=128)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
                                atol=1e-5)
 
@@ -106,8 +108,34 @@ def test_kernel_matches_model_path():
     from repro.models.attention import attention
     B, S, H, KV, hd = 1, 128, 4, 2, 64
     q, k, v = _qkv(B, S, S, H, KV, hd, jnp.float32)
-    y_kernel = ops.flash_attention(q, k, v, causal=True, block_q=64,
-                                   block_kv=64)
+    y_kernel = ops.flash_attention(q, k, v, causal=True, block_q=128,
+                                   block_kv=128)
     y_model = attention(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Tiling contract: misalignment raises instead of silently clamping
+# ---------------------------------------------------------------------------
+
+def test_flash_sub128_block_raises():
+    """block_q=64 used to be clamp-accepted; now a non-MXU block raises."""
+    q, k, v = _qkv(1, 128, 128, 4, 4, 64, jnp.float32)
+    with pytest.raises(ValueError, match="block_q=64"):
+        ops.flash_attention(q, k, v, block_q=64, block_kv=128)
+
+
+def test_flash_sub128_seq_raises():
+    q, k, v = _qkv(1, 64, 64, 4, 4, 64, jnp.float32)
+    with pytest.raises(ValueError, match="S=64"):
+        ops.flash_attention(q, k, v)
+
+
+def test_decode_non_divisible_block_raises():
+    B, T, H, KV, hd = 1, 256, 4, 4, 32
+    q = jnp.zeros((B, H, hd), jnp.float32)
+    k = jnp.zeros((B, T, KV, hd), jnp.float32)
+    v = jnp.zeros((B, T, KV, hd), jnp.float32)
+    with pytest.raises(ValueError, match="T=256"):
+        ops.decode_attention(q, k, v, jnp.int32(7), block_kv=384)

@@ -1,0 +1,156 @@
+"""Catalog-driven parity + planner contracts.
+
+The interpret-mode numerical-parity sweep runs EVERY catalog kernel
+against its ``kernels/ref.py`` oracle across fp32/bf16 with
+planner-chosen tiles on EVERY registered device (mi200 -> tpu_v5p) —
+the compute layer cannot silently rot for any (kernel, device, dtype)
+cell again.  The planner contracts pin the acceptance criteria:
+MXU-aligned, VMEM-budget-respecting tiles for every device, and the
+scoreboard engine consuming the identical TilePlan the kernel executes.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.arch import get_device, list_devices
+from repro.kernels import get_kernel, list_kernels, plan_for
+from repro.kernels.plan import tile_align, vmem_budget
+
+RNG = np.random.RandomState(42)
+
+DEVICES = list(list_devices())
+
+#: Small but multi-tile shapes, MXU-aligned where the contract requires.
+SHAPES = {
+    "mfma_gemm": {"M": 128, "N": 128, "K": 256},
+    "moe_gmm": {"E": 2, "C": 128, "K": 128, "N": 128},
+    "flash_attention": {"B": 1, "S": 128, "T": 128, "H": 2, "KV": 1,
+                        "hd": 64},
+    "decode_attention": {"B": 1, "T": 256, "H": 4, "KV": 2, "hd": 32},
+    "mamba2_ssd": {"B": 1, "S": 64, "nh": 2, "hd": 16, "ds": 16},
+}
+
+#: Big shapes for the alignment/budget contract (planner must tile, not
+#: swallow, these).
+BIG_SHAPES = {
+    "mfma_gemm": {"M": 4096, "N": 4096, "K": 4096},
+    "moe_gmm": {"E": 16, "C": 1024, "K": 4096, "N": 2048},
+    "flash_attention": {"B": 8, "S": 4096, "T": 4096, "H": 32, "KV": 8,
+                        "hd": 128},
+    "decode_attention": {"B": 8, "T": 8192, "H": 32, "KV": 8, "hd": 128},
+    "mamba2_ssd": {"B": 8, "S": 4096, "nh": 32, "hd": 64, "ds": 128},
+}
+
+
+def _case(kernel: str, s, dt):
+    """(op args, ref args) for one kernel; dtype applies to activations."""
+    if kernel == "mfma_gemm":
+        a = jnp.asarray(RNG.randn(s["M"], s["K"]), dt)
+        b = jnp.asarray(RNG.randn(s["K"], s["N"]), dt)
+        c = jnp.asarray(RNG.randn(s["M"], s["N"]), jnp.float32)
+        return (a, b, c), (a, b, c)
+    if kernel == "moe_gmm":
+        x = jnp.asarray(RNG.randn(s["E"], s["C"], s["K"]), dt)
+        w = jnp.asarray(RNG.randn(s["E"], s["K"], s["N"]), dt)
+        return (x, w), (x, w)
+    if kernel == "flash_attention":
+        q = jnp.asarray(RNG.randn(s["B"], s["S"], s["H"], s["hd"]), dt)
+        k = jnp.asarray(RNG.randn(s["B"], s["T"], s["KV"], s["hd"]), dt)
+        v = jnp.asarray(RNG.randn(s["B"], s["T"], s["KV"], s["hd"]), dt)
+        return (q, k, v), (q, k, v)
+    if kernel == "decode_attention":
+        q = jnp.asarray(RNG.randn(s["B"], s["H"], s["hd"]), dt)
+        k = jnp.asarray(RNG.randn(s["B"], s["T"], s["KV"], s["hd"]), dt)
+        v = jnp.asarray(RNG.randn(s["B"], s["T"], s["KV"], s["hd"]), dt)
+        kv_len = jnp.int32(s["T"] - 63)
+        return (q, k, v, kv_len), (q, k, v, kv_len)
+    if kernel == "mamba2_ssd":
+        x = jnp.asarray(RNG.randn(s["B"], s["S"], s["nh"], s["hd"]) * 0.5, dt)
+        dt_in = jnp.asarray(
+            np.abs(RNG.randn(s["B"], s["S"], s["nh"])) * 0.4 + 0.05,
+            jnp.float32)
+        A = jnp.asarray(-np.abs(RNG.randn(s["nh"])) - 0.1, jnp.float32)
+        Bm = jnp.asarray(RNG.randn(s["B"], s["S"], 1, s["ds"]) * 0.5,
+                         jnp.float32)
+        Cm = jnp.asarray(RNG.randn(s["B"], s["S"], 1, s["ds"]) * 0.5,
+                         jnp.float32)
+        return (x, dt_in, A, Bm, Cm), (x, dt_in, A, Bm, Cm)
+    raise AssertionError(kernel)
+
+
+def _tol(kernel, dt):
+    if dt == jnp.bfloat16:
+        return dict(rtol=5e-2, atol=5e-2)
+    loose = kernel in ("flash_attention", "decode_attention", "mamba2_ssd")
+    return dict(rtol=2e-3, atol=2e-3) if loose else dict(rtol=5e-4, atol=5e-4)
+
+
+def test_catalog_is_complete():
+    assert list(list_kernels()) == ["decode_attention", "flash_attention",
+                                    "mamba2_ssd", "mfma_gemm", "moe_gmm"]
+
+
+@pytest.mark.parametrize("device", DEVICES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("kernel", sorted(SHAPES))
+def test_catalog_parity_every_device(kernel, dt, device):
+    """Planner-chosen tiles on ``device``, interpret mode, vs the oracle."""
+    entry = get_kernel(kernel)
+    shapes = SHAPES[kernel]
+    args, ref_args = _case(kernel, shapes, dt)
+    plan = plan_for(kernel, shapes, dtype=dt, device=device)
+    y = entry.op_fn(*args, plan=plan, interpret=True)
+    yr = entry.ref_fn(*ref_args)
+    if isinstance(y, tuple):
+        for got, want in zip(y, yr):
+            np.testing.assert_allclose(np.asarray(got, np.float32),
+                                       np.asarray(want, np.float32),
+                                       **_tol(kernel, dt))
+    else:
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(yr, np.float32),
+                                   **_tol(kernel, dt))
+
+
+@pytest.mark.parametrize("device", DEVICES)
+@pytest.mark.parametrize("kernel", sorted(BIG_SHAPES))
+def test_plan_aligned_and_budgeted_every_device(kernel, device):
+    """Acceptance criterion: MXU-aligned, VMEM-budget-respecting tiles for
+    every device in the repro.arch registry."""
+    spec = get_device(device)
+    plan = plan_for(kernel, BIG_SHAPES[kernel], dtype="bfloat16",
+                    device=device)
+    align = tile_align(spec)
+    for name, block in plan.blocks.items():
+        if name == "chunk":
+            assert block % 8 == 0, plan
+        else:
+            assert block % align == 0, plan
+    assert plan.vmem_bytes <= plan.vmem_budget, plan
+    assert plan.vmem_budget <= spec.vmem_bytes
+    assert all(g >= 1 for g in plan.grid), plan
+
+
+def test_plan_respects_tight_budget():
+    """A small-VMEM derived device forces smaller tiles than its base."""
+    base = get_device("tpu_v5e")
+    tiny = base.derive("tpu_tiny_vmem", vmem_bytes=1 << 20)
+    big = plan_for("mfma_gemm", BIG_SHAPES["mfma_gemm"], device=base)
+    small = plan_for("mfma_gemm", BIG_SHAPES["mfma_gemm"], device=tiny)
+    assert small.vmem_bytes <= (1 << 20) // 2
+    assert sum(small.blocks.values()) < sum(big.blocks.values())
+
+
+def test_plan_override_pins_block():
+    p = plan_for("mfma_gemm", {"M": 1024, "N": 1024, "K": 1024},
+                 block_m=128)
+    assert p.blocks["block_m"] == 128
+    with pytest.raises(ValueError, match="block_m"):
+        plan_for("mfma_gemm", {"M": 1024, "N": 1024, "K": 1024}, block_m=96)
+
+
+def test_plan_unknown_override_rejected():
+    with pytest.raises(ValueError, match="unknown block override"):
+        plan_for("decode_attention",
+                 {"B": 1, "T": 256, "H": 4, "KV": 2, "hd": 32}, block_m=128)

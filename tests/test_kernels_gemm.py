@@ -65,14 +65,13 @@ def test_mfma_gemm_matches_mfma_microops():
     np.testing.assert_allclose(np.asarray(y), d, rtol=1e-4, atol=1e-4)
 
 
-@pytest.mark.parametrize("e,c,k,n", [(4, 128, 256, 128), (8, 64, 128, 256),
-                                     (2, 256, 512, 64)])
+@pytest.mark.parametrize("e,c,k,n", [(4, 128, 256, 128), (8, 128, 128, 256),
+                                     (2, 256, 512, 128)])
 @pytest.mark.parametrize("dt", [jnp.bfloat16, jnp.float32])
 def test_moe_gmm_sweep(e, c, k, n, dt):
     x = jnp.asarray(RNG.randn(e, c, k), dt)
     w = jnp.asarray(RNG.randn(e, k, n), dt)
-    y = ops.moe_gmm(x, w, block_m=min(64, c), block_n=min(64, n),
-                    block_k=min(128, k))
+    y = ops.moe_gmm(x, w)           # planner-chosen MXU-aligned tiles
     yr = ref.moe_gmm_ref(x, w)
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32), **_tol(dt))
@@ -80,10 +79,66 @@ def test_moe_gmm_sweep(e, c, k, n, dt):
 
 def test_moe_gmm_expert_isolation():
     """Each expert's output depends only on its own slice."""
-    x = jnp.asarray(RNG.randn(4, 64, 128), jnp.float32)
-    w = jnp.asarray(RNG.randn(4, 128, 64), jnp.float32)
-    y = ops.moe_gmm(x, w, block_m=64, block_n=64, block_k=128)
+    x = jnp.asarray(RNG.randn(4, 128, 128), jnp.float32)
+    w = jnp.asarray(RNG.randn(4, 128, 128), jnp.float32)
+    y = ops.moe_gmm(x, w, block_m=128, block_n=128, block_k=128)
     x2 = x.at[2].set(0.0)
-    y2 = ops.moe_gmm(x2, w, block_m=64, block_n=64, block_k=128)
+    y2 = ops.moe_gmm(x2, w, block_m=128, block_n=128, block_k=128)
     np.testing.assert_allclose(np.asarray(y[0]), np.asarray(y2[0]))
     np.testing.assert_allclose(np.asarray(y2[2]), 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Tiling contract: misalignment raises instead of silently clamping
+# ---------------------------------------------------------------------------
+
+def test_gemm_sub128_dim_raises():
+    """M=64 used to pass via the min(block, dim) clamp with a non-MXU
+    64-wide block; it must now raise naming the offending dim."""
+    a = jnp.zeros((64, 128), jnp.float32)
+    b = jnp.zeros((128, 128), jnp.float32)
+    c = jnp.zeros((64, 128), jnp.float32)
+    with pytest.raises(ValueError, match="M=64"):
+        ops.mfma_gemm(a, b, c)
+
+
+def test_gemm_non_divisible_block_raises():
+    a = jnp.zeros((256, 256), jnp.float32)
+    b = jnp.zeros((256, 256), jnp.float32)
+    c = jnp.zeros((256, 256), jnp.float32)
+    with pytest.raises(ValueError, match="N=256"):
+        ops.mfma_gemm(a, b, c, block_n=192)
+
+
+def test_gemm_unaligned_block_raises():
+    a = jnp.zeros((256, 256), jnp.float32)
+    b = jnp.zeros((256, 256), jnp.float32)
+    c = jnp.zeros((256, 256), jnp.float32)
+    with pytest.raises(ValueError, match="block_m=64"):
+        ops.mfma_gemm(a, b, c, block_m=64)
+
+
+def test_moe_gmm_sub128_dim_raises():
+    x = jnp.zeros((4, 64, 128), jnp.float32)
+    w = jnp.zeros((4, 128, 128), jnp.float32)
+    with pytest.raises(ValueError, match="C=64"):
+        ops.moe_gmm(x, w)
+
+
+def test_moe_gmm_shape_mismatch_message():
+    """The bare shape assert is now a descriptive ValueError (the
+    ServeEngine.generate error-contract precedent)."""
+    from repro.kernels.moe_gmm import moe_gmm as raw
+    x = jnp.zeros((4, 128, 128), jnp.float32)
+    w = jnp.zeros((2, 128, 128), jnp.float32)
+    with pytest.raises(ValueError, match="expert count"):
+        raw(x, w, block_m=128, block_n=128, block_k=128)
+
+
+def test_gemm_operand_mismatch_message():
+    a = jnp.zeros((128, 128), jnp.float32)
+    b = jnp.zeros((256, 128), jnp.float32)
+    c = jnp.zeros((128, 128), jnp.float32)
+    with pytest.raises(ValueError, match="incompatible operands"):
+        from repro.kernels.mfma_gemm import mfma_gemm as raw
+        raw(a, b, c, block_m=128, block_n=128, block_k=128)

@@ -36,6 +36,23 @@ def test_ssd_kernel_sweep(B, S, nh, hd, G, ds, chunk):
                                atol=2e-3)
 
 
+def test_ssd_kernel_planner_path():
+    """Planner-chosen chunk (no explicit block) matches the oracle."""
+    x, dt, A, Bm, Cm = _inputs(1, 128, 2, 16, 1, 16)
+    y, h = ops.mamba2_ssd(x, dt, A, Bm, Cm)
+    yr, hr = ref.mamba2_ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_ssd_non_divisible_chunk_raises():
+    x, dt, A, Bm, Cm = _inputs(1, 64, 2, 16, 1, 16)
+    with pytest.raises(ValueError, match="S=64"):
+        ops.mamba2_ssd(x, dt, A, Bm, Cm, chunk=48)
+
+
 def test_model_ssd_chunked_vs_sequential():
     """The model's XLA chunked scan == sequential oracle."""
     x, dt, A, Bm, Cm = _inputs(2, 96, 4, 16, 1, 24)

@@ -209,6 +209,107 @@ def test_scoreboard_scale_overlay_scales_time(gemm_txt):
 # Custom engines plug into the same pipeline
 # ---------------------------------------------------------------------------
 
+# ---------------------------------------------------------------------------
+# Report.plan: predicted tiles == the tiles the kernel layer executes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine_name", list(ENGINES))
+@pytest.mark.parametrize("device", list_devices())
+def test_report_plan_matches_kernel_planner(engine_name, device, gemm_txt):
+    """Every engine reports the SAME TilePlan plan_for derives for the
+    module's dominant dot — the cross-check hook between prediction and
+    execution."""
+    from repro.kernels.plan import plan_for
+    rep = predict(gemm_txt, device=device, engine=engine_name)
+    expected = plan_for("mfma_gemm", {"M": 256, "N": 256, "K": 256},
+                        dtype="bf16", device=device, pad=True)
+    assert rep.plan is not None
+    for k, v in expected.blocks.items():
+        assert rep.plan[k] == v, (engine_name, device, rep.plan)
+    assert rep.plan["device"] == device
+    # and the ops layer would execute exactly these tiles
+    assert expected.kwargs() == {k: rep.plan[k] for k in expected.blocks}
+
+
+def test_scoreboard_int8_dot_plans_and_costs():
+    """Integer-dtype dots (s8 -> i32_16x16x16i8 on mi200) must plan via
+    the shared HLO byte table instead of crashing the scoreboard engine
+    (regression: plan._itemsize once lacked the s8/u8 names)."""
+    from repro.perf.hlo_ir import KernelOp
+    op = KernelOp(kind="dot", opcode="dot", dtype="s8",
+                  batch=1, m=128, n=128, k=128)
+    g = KernelGraph(ops=[op], flops=float(op.flops),
+                    bytes_accessed=3 * 128 * 128, key="s8-gemm")
+    rep = predict(g, device="mi200", engine="scoreboard")
+    assert rep.total_time_s > 0
+    assert rep.plan is not None and rep.plan["dtype"] == "s8"
+
+
+def test_scoreboard_degrades_on_unplannable_device(gemm_txt):
+    """A what-if device whose fast memory can't hold one aligned tile set
+    must still produce a Report (plan column empty), like the other
+    engines — not crash predict()."""
+    from repro.core.machine import MachineModel
+    tiny = get_device("mi200").derive("mi200_tiny_vmem", vmem_bytes=300 << 10)
+    machine = MachineModel.from_spec(tiny)
+    rep = predict(gemm_txt, device=machine, engine="scoreboard")
+    assert rep.total_time_s > 0 and rep.metrics["simulated"] == 1.0
+    assert rep.plan is None and rep.plan_summary() == "-"
+
+
+def test_plan_for_dot_budget_failure_is_not_masked():
+    """Only unknown dtypes fall back to bf16; a budget overflow must
+    propagate instead of silently reporting tiles of another dtype
+    (Report.plan exists to cross-check what would really execute)."""
+    from repro.perf.engines import plan_for_dot
+    from repro.perf.hlo_ir import KernelOp
+    from repro.core.machine import MachineModel
+    # budget 225 KiB: the minimal bf16 tile set (192 KiB) fits, f32
+    # (256 KiB) does not — a silent bf16 fallback would mislabel the plan
+    spec = get_device("mi200").derive("mi200_small_vmem",
+                                      vmem_bytes=450 << 10)
+    machine = MachineModel.from_spec(spec)
+    f32_dot = KernelOp(kind="dot", opcode="dot", dtype="f32",
+                       batch=1, m=256, n=256, k=256)
+    with pytest.raises(ValueError, match="working-set budget"):
+        plan_for_dot(machine, f32_dot)
+    odd = KernelOp(kind="dot", opcode="dot", dtype="c64",
+                   batch=1, m=256, n=256, k=256)
+    assert plan_for_dot(machine, odd).dtype == "bf16"  # dtype fallback
+
+
+def test_report_plan_none_for_totals_only_graph():
+    g = KernelGraph.from_totals(flops=1e12, bytes_accessed=1e9,
+                                collective_wire=0.0)
+    rep = predict(g, device="mi300", engine="roofline")
+    assert rep.plan is None
+    assert rep.plan_summary() == "-"
+
+
+def test_scoreboard_measures_the_reported_plan(gemm_txt):
+    """The representative-tile stream is derived from the reported plan
+    via the microbench path (identical TilePlan end to end)."""
+    from repro.core.microbench import (measure_plan_throughput,
+                                       plan_microops)
+    from repro.core.machine import get_machine
+    from repro.perf.engines import plan_for_dot
+    from repro.perf import parse_cached
+
+    machine = get_machine("mi300")
+    graph = parse_cached(gemm_txt)
+    (d, cnt), = graph.dot_pairs()
+    plan = plan_for_dot(machine, d)
+    rep = predict(graph, device="mi300", engine="scoreboard")
+    assert {k: rep.plan[k] for k in plan.blocks} == dict(plan.blocks)
+    meas = measure_plan_throughput(machine, "fp32_16x16x16fp16", plan)
+    assert meas["tiles_per_wf"] >= 1
+    assert meas["tiles_per_wf"] <= max(
+        1, -(-plan_microops(plan, "fp32_16x16x16fp16")
+             // machine.mce_per_cu))
+    # measured throughput appears in the per-op detail with the tile
+    assert any("tile " in op.detail for op in rep.per_op)
+
+
 def test_register_custom_engine(gemm_txt):
     from repro.perf import register_engine
     from repro.perf.report import Report as R
