@@ -39,7 +39,7 @@ def run(gpu: str):
                    for k, per_n in table.items() for n in per_n) \
         / n_meas * 100
     rows.append((f"table_{gpu}/mean_error", dt, f"{mean_err:.3f}% "
-                 f"(paper: 1.455% MI200 / 1.332% MI300 incl. KVM jitter)"))
+                 "(paper: 1.455% MI200 / 1.332% MI300 incl. KVM jitter)"))
     return rows
 
 

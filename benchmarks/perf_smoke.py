@@ -3,13 +3,26 @@ a small grid and write a ``BENCH_perf.json`` artifact, so every CI run
 appends a comparable point to the performance history.
 
     PYTHONPATH=src python benchmarks/perf_smoke.py [--out BENCH_perf.json]
+        [--check-against BENCH_baseline.json] [--threshold 0.25]
 
 The artifact records each benchmark row (name, us_per_call, derived) plus
 the parse-cache counters — a regression that re-parses modules per
 estimator shows up as ``cache.parses`` climbing above the workload count.
-"""
 
-from __future__ import annotations
+``--check-against`` is the CI trend guard: rows are matched by
+(benchmark, name) against the committed baseline and the run FAILS (exit
+1) when any row regresses by more than ``--threshold`` (default 25%) —
+the artifact-only era let a 10x pipeline slowdown merge unnoticed.
+Because the baseline's wall-clock numbers come from a different machine
+than the CI runner, comparison is *speed-normalised*: the median
+new/baseline ratio across all matched rows is treated as the machine
+speed factor, and a row only fails when it regresses >threshold beyond
+that factor.  (A uniform all-rows slowdown therefore reads as "slower
+machine" — absolute trends live in the uploaded artifact's history.)
+Rows new since the baseline are reported but never fail; refresh the
+baseline by copying a trusted run's ``--out`` file over
+``BENCH_baseline.json``.
+"""
 
 import argparse
 import dataclasses
@@ -23,9 +36,48 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 
+def check_against(payload: dict, baseline: dict, threshold: float):
+    """(regressing rows, machine speed factor).
+
+    Rows are matched by (benchmark, row name); rows absent from the
+    baseline are skipped (new benchmarks must not fail the guard on
+    their first run).  The speed factor is the median new/baseline
+    ratio over matched rows — a uniformly faster/slower machine shifts
+    every row together, so only rows regressing > threshold *beyond*
+    that shift count.
+    """
+    base_rows = {(bench, r["name"]): r["us_per_call"]
+                 for bench, rows in baseline.get("results", {}).items()
+                 for r in rows}
+    pairs = []
+    for bench, rows in payload["results"].items():
+        for r in rows:
+            base = base_rows.get((bench, r["name"]))
+            if base is None:
+                print(f"[perf_smoke] note: {bench}/{r['name']} not in "
+                      "baseline (new row, skipped)")
+                continue
+            pairs.append(((bench, r["name"]), base, r["us_per_call"]))
+    if not pairs:
+        return [], 1.0
+    ratios = sorted(new / base for _, base, new in pairs)
+    # clamped at 1.0: a slower machine relaxes the bar, but rows are
+    # never penalised just because OTHER rows happened to run faster
+    # (compile-dominated rows show large benign run-to-run variance)
+    speed = max(ratios[len(ratios) // 2], 1.0)
+    allowed = speed * (1.0 + threshold)
+    return [(key, base, new) for key, base, new in pairs
+            if new / base > allowed], speed
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_perf.json")
+    ap.add_argument("--check-against", default=None, metavar="BASELINE",
+                    help="fail on >threshold us_per_call regression vs "
+                         "this baseline JSON")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25)")
     args = ap.parse_args()
 
     from benchmarks import scoreboard_bench, whatif_workloads
@@ -55,6 +107,21 @@ def main() -> int:
     print(f"[perf_smoke] {n_rows} rows -> {args.out} "
           f"(cache parses={payload['cache']['parses']}, "
           f"hits={payload['cache']['hits']})")
+
+    if args.check_against:
+        baseline = json.loads(Path(args.check_against).read_text())
+        regressions, speed = check_against(payload, baseline,
+                                           args.threshold)
+        if regressions:
+            for (bench, name), base, new in regressions:
+                print(f"[perf_smoke] REGRESSION {bench}/{name}: "
+                      f"{base:.3f}us -> {new:.3f}us "
+                      f"({new / base:.2f}x vs machine-speed factor "
+                      f"{speed:.2f}x; >{args.threshold * 100:.0f}% over)")
+            return 1
+        print(f"[perf_smoke] trend guard OK: no row regressed "
+              f">{args.threshold * 100:.0f}% beyond the {speed:.2f}x "
+              f"machine-speed factor vs {args.check_against}")
     return 0
 
 

@@ -50,7 +50,7 @@ def main():
     print(f"arch={cfg.name}: {args.batch} requests x "
           f"({args.prompt_len} prompt + {args.gen} generated)")
     print(f"wall={dt:.2f}s  ->  {args.batch * args.gen / dt:.1f} tok/s "
-          f"(batched decode)")
+          "(batched decode)")
     for i in range(min(2, args.batch)):
         print(f"req{i}: ...{prompts[i, -4:].tolist()} => "
               f"{res.tokens[i, :12].tolist()}")

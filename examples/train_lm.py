@@ -11,14 +11,13 @@ Presets:
 """
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.pipeline import SyntheticLM, prefetch_to_device
+from repro.data.pipeline import SyntheticLM
 from repro.models import init_params
 from repro.models.config import ModelConfig
 from repro.train.fault_tolerance import FailureInjector, TrainController

@@ -15,7 +15,7 @@ import jax
 
 sys.path.insert(0, "src")
 
-from repro.configs import SHAPES, get_config
+from repro.configs import SHAPES
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import cell_fn_and_specs
 from repro.parallel.api import set_mesh

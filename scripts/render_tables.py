@@ -49,7 +49,7 @@ def roofline_table() -> str:
     census = Counter(r["dominant"] for r in rows)
     out.append("")
     out.append(f"Bottleneck census: {dict(census)}; constants: 197 TF/s "
-               f"bf16, 819 GB/s HBM, 2x50 GB/s ICI links.")
+               "bf16, 819 GB/s HBM, 2x50 GB/s ICI links.")
     return "\n".join(out)
 
 

@@ -18,7 +18,7 @@ paper's microbenchmarks and our workload loops need:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 __all__ = ["Instr", "Program", "Wavefront", "Workload",
            "mfma", "s_memtime", "s_nop", "s_waitcnt", "v_alu", "v_load",

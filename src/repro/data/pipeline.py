@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import numpy as np

@@ -5,12 +5,18 @@ Five kernels (``mfma_gemm``, ``moe_gmm``, ``flash_attention``,
 ``ref.py``.  All Pallas/TPU version differences are absorbed by
 ``compat``; all tile selection is derived from the device registry by
 ``plan`` (``plan_for`` + the kernel catalog).  Call through ``ops`` —
-the wrappers resolve plans and interpret mode.
+the wrappers resolve plans, interpret mode, and ragged-tail padding
+(``pad=True``).  The model layer routes through ``dispatch``, which
+picks kernel-vs-reference per op and falls back (with a logged reason)
+when the backend or shapes cannot support the kernel.
 """
 
+from repro.kernels.dispatch import (Decision, decide, last_decisions,
+                                    reset_decisions)
 from repro.kernels.plan import (KernelEntry, TilePlan, UnknownKernelError,
                                 get_kernel, list_kernels, plan_for,
                                 register_kernel)
 
-__all__ = ["KernelEntry", "TilePlan", "UnknownKernelError", "get_kernel",
-           "list_kernels", "plan_for", "register_kernel"]
+__all__ = ["Decision", "KernelEntry", "TilePlan", "UnknownKernelError",
+           "decide", "get_kernel", "last_decisions", "list_kernels",
+           "plan_for", "register_kernel", "reset_decisions"]

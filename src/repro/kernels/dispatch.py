@@ -1,0 +1,104 @@
+"""Kernel-vs-reference dispatch: the model layer's entry to the kernels.
+
+``repro.models`` mixers carry two formulations of every catalog-backed op:
+the GSPMD-shardable XLA reference (the formulation the dry-run compiles)
+and the Pallas kernel that embodies the MFMA contract.  This module is the
+single place that picks between them.  :func:`decide` plans the kernel's
+tiles for the concrete shapes (``pad=True`` by default, so ragged model
+shapes — odd sequence lengths, capacity-trimmed MoE groups — stay
+eligible via the ops-layer pad/mask/slice path) and returns a
+:class:`Decision`; anything the kernel path cannot support falls back to
+the reference with a *logged reason* instead of an exception:
+
+* mesh-sharded execution (the kernels are single-device; GSPMD cannot
+  partition a ``pallas_call``) — callers pass ``sharded=True``;
+* shapes/dtypes the planner rejects even with padding (working set over
+  the VMEM budget, unsizable dtype);
+* op-specific contract mismatches the caller detects (a custom softmax
+  scale, MLA's ``v_head_dim != qk_dim``) — reported via :func:`fallback`.
+
+Decisions are recorded per kernel (:func:`last_decisions`) so the parity
+suite can assert the kernel path actually ran rather than silently
+falling back; fall-back reasons are logged once per (kernel, reason) on
+the ``repro.kernels.dispatch`` logger.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Dict, Mapping, Optional, Union
+
+from repro.arch.spec import DeviceSpec
+from repro.kernels.plan import TilePlan, UnknownKernelError, plan_for
+
+__all__ = ["Decision", "decide", "fallback", "last_decisions",
+           "reset_decisions"]
+
+log = logging.getLogger(__name__)
+
+#: kernel name -> the most recent Decision (trace-time introspection).
+_DECISIONS: Dict[str, "Decision"] = {}
+#: (kernel, reason) pairs already logged — fallback log lines fire once.
+_LOGGED: set = set()
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One dispatch outcome: kernel path (with its plan) or reference."""
+
+    kernel: str
+    use_kernel: bool
+    reason: str                      # "ok" or why the reference path won
+    plan: Optional[TilePlan] = None
+
+
+def _record(decision: Decision) -> Decision:
+    _DECISIONS[decision.kernel] = decision
+    if not decision.use_kernel:
+        key = (decision.kernel, decision.reason)
+        if key not in _LOGGED:
+            _LOGGED.add(key)
+            log.info("dispatch %s -> XLA reference: %s",
+                     decision.kernel, decision.reason)
+    return decision
+
+
+def fallback(kernel: str, reason: str) -> Decision:
+    """Record a caller-detected fallback (op-specific contract mismatch)."""
+    return _record(Decision(kernel=kernel, use_kernel=False, reason=reason))
+
+
+def decide(kernel: str, shapes: Mapping[str, int], *,
+           dtype="bfloat16",
+           device: Union[None, str, DeviceSpec, object] = None,
+           pad: bool = True,
+           sharded: bool = False) -> Decision:
+    """Pick kernel-vs-reference for ``kernel`` at ``shapes``.
+
+    Plans tiles with ``pad=True`` so non-quantum-multiple shapes run the
+    kernel via the ops-layer pad/mask/slice path; a planning failure
+    (or ``sharded=True``) yields a reference Decision carrying the reason.
+    Shapes are static under ``jax.jit`` tracing, so decisions are made at
+    trace time and cost nothing per step.
+    """
+    if sharded:
+        return fallback(kernel, "mesh-sharded execution: the Pallas "
+                                "kernels are single-device (GSPMD cannot "
+                                "partition a pallas_call)")
+    try:
+        plan = plan_for(kernel, shapes, dtype=dtype, device=device, pad=pad)
+    except (UnknownKernelError, ValueError) as e:
+        return fallback(kernel, str(e))
+    return _record(Decision(kernel=kernel, use_kernel=True, reason="ok",
+                            plan=plan))
+
+
+def last_decisions() -> Dict[str, Decision]:
+    """Most recent Decision per kernel (for tests / introspection)."""
+    return dict(_DECISIONS)
+
+
+def reset_decisions() -> None:
+    _DECISIONS.clear()
+    _LOGGED.clear()

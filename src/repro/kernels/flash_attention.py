@@ -2,9 +2,14 @@
 
 VMEM tiling: q tile (block_q, hd), K/V tiles (block_kv, hd), running
 (m, l, acc) in f32 VMEM scratch.  Grid (B*KV*G, Sq/block_q, T/block_kv)
-with the KV dimension innermost/sequential; fully-masked causal blocks are
-skipped with ``pl.when`` (the XLA reference in models/attention.py executes
-them — one of the kernel's perf wins on real TPUs).
+with the KV dimension innermost/sequential; fully-masked causal blocks and
+blocks past ``kv_len`` are skipped with ``pl.when`` (the XLA reference in
+models/attention.py executes them — one of the kernel's perf wins on real
+TPUs).
+
+``kv_len`` (an SMEM scalar, default T) masks key positions >= kv_len —
+both genuinely short caches and the ragged-tail padding the ops wrapper
+applies so non-128-multiple T runs the kernel path.
 
 The contract matches ``repro.kernels.ref.flash_attention_ref`` (and the
 model's `_flash_sdpa`): grouped heads, causal, optional kv_len mask.
@@ -27,9 +32,9 @@ __all__ = ["flash_attention"]
 _NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  scale: float, causal: bool, n_kv: int, block_q: int,
-                  block_kv: int):
+def _flash_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  acc_ref, *, scale: float, causal: bool, n_kv: int,
+                  block_q: int, block_kv: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -39,22 +44,26 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # causal: skip blocks strictly above the diagonal
-    run = True
+    kv_len = len_ref[0]
+    # skip blocks entirely past kv_len, and (causal) strictly above the
+    # diagonal
+    run = ki * block_kv < kv_len
     if causal:
-        run = ki * block_kv <= qi * block_q + block_q - 1
+        run = jnp.logical_and(
+            run, ki * block_kv <= qi * block_q + block_q - 1)
 
     @pl.when(run)
     def _compute():
         q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
         k = k_ref[0].astype(jnp.float32)                  # (bkv, hd)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bkv)
+        col = ki * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
         if causal:
             row = qi * block_q + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_kv), 0)
-            col = ki * block_kv + jax.lax.broadcasted_iota(
-                jnp.int32, (block_q, block_kv), 1)
             s = jnp.where(col <= row, s, _NEG_INF)
+        s = jnp.where(col < kv_len, s, _NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -74,13 +83,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
                                              "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, block_q: int,
-                    block_kv: int, interpret: bool = False) -> jax.Array:
+                    causal: bool = True, block_q: int, block_kv: int,
+                    kv_len=None, interpret: bool = False) -> jax.Array:
     """q: (B, S, H, hd); k/v: (B, T, KV, hd) with H = KV*G -> (B, S, H, hd).
 
     ``block_q``/``block_kv`` must be MXU-aligned divisors of S/T (derive
-    them with ``repro.kernels.plan.plan_for``; the XLA path handles
-    ragged tails).
+    them with ``repro.kernels.plan.plan_for``; ``ops.flash_attention``
+    with ``pad=True`` pads ragged shapes onto this contract).  ``kv_len``
+    (scalar int32, default T) masks key positions >= kv_len.
     """
     B, S, H, hd = q.shape
     T, KV = k.shape[1], k.shape[2]
@@ -90,6 +100,9 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                         "T": (T, block_kv)},
                     depth_dims=(),
                     block_names={"S": "block_q", "T": "block_kv"})
+    if kv_len is None:
+        kv_len = T
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32)[None], (1,))
 
     # (B, S, KV, G, hd) -> flat (B*KV*G, S, hd) query-major layout
     qf = q.reshape(B, S, KV, G, hd).transpose(0, 2, 3, 1, 4) \
@@ -106,6 +119,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                           block_kv=block_kv),
         grid=grid,
         in_specs=[
+            compat.smem_block_spec(),
             pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
@@ -120,6 +134,6 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(qf, kf, vf)
+    )(lens, qf, kf, vf)
     return out.reshape(B, KV, G, S, hd).transpose(0, 3, 1, 2, 4) \
         .reshape(B, S, H, hd)

@@ -8,6 +8,15 @@ caller can pass a precomputed ``plan=`` (e.g. the one a perf engine
 reported) or pin individual blocks (``block_m=...``), which are validated
 by the same alignment contract the planner enforces.
 
+Ragged tails: with ``pad=True`` the wrapper plans padded geometry
+(``plan_for(..., pad=True)``), zero-pads the operands up to the plan's
+``dims``, masks the epilogue where padding would change the math
+(``kv_len``-style key masking for attention; ``dt=0`` identity steps for
+the SSD; zero contraction blocks are exact for the GEMMs) and slices the
+output back to the caller's shape — so non-128-multiple model shapes run
+the kernel path instead of raising.  The default ``pad=False`` keeps the
+strict contract: misaligned shapes raise a descriptive ``ValueError``.
+
 On CPU (this container) the kernels execute in interpret mode — the
 kernel body runs in Python per grid step, validating correctness; on a
 real TPU backend the same call sites compile to Mosaic.
@@ -16,7 +25,9 @@ real TPU backend the same call sites compile to Mosaic.
 
 from __future__ import annotations
 
-from typing import Dict, Mapping, Optional
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax.numpy as jnp
 
 from repro.kernels import (compat, decode_attention as _da,
                            flash_attention as _fa, mamba2_ssd as _ssd,
@@ -27,82 +38,148 @@ __all__ = ["mfma_gemm", "flash_attention", "decode_attention", "mamba2_ssd",
            "moe_gmm"]
 
 
-def _blocks(kernel: str, plan: Optional[TilePlan],
-            shapes: Mapping[str, int], dtype, device,
-            overrides: Dict[str, Optional[int]]) -> Dict[str, int]:
-    """Resolve the block kwargs: explicit plan > pinned blocks > planner."""
-    if plan is not None:
-        if plan.kernel != kernel:
-            raise ValueError(f"{kernel}: got a plan for {plan.kernel!r}; "
-                             f"derive one with plan_for({kernel!r}, ...)")
-        blocks = plan.kwargs()
-        blocks.update({k: v for k, v in overrides.items() if v is not None})
-        return blocks
-    return plan_for(kernel, shapes, dtype=dtype, device=device,
-                    **overrides).kwargs()
+def _resolve(kernel: str, plan: Optional[TilePlan],
+             shapes: Mapping[str, int], dtype, device,
+             overrides: Dict[str, Optional[int]],
+             pad: bool) -> Tuple[TilePlan, Dict[str, int]]:
+    """(plan, block kwargs): explicit plan > pinned blocks > planner."""
+    if plan is None:
+        plan = plan_for(kernel, shapes, dtype=dtype, device=device, pad=pad,
+                        **overrides)
+    elif plan.kernel != kernel:
+        raise ValueError(f"{kernel}: got a plan for {plan.kernel!r}; "
+                         f"derive one with plan_for({kernel!r}, ...)")
+    blocks = plan.kwargs()
+    blocks.update({k: v for k, v in overrides.items() if v is not None})
+    return plan, blocks
+
+
+def _padded(plan: TilePlan, dim: str, size: int) -> int:
+    """The padded size the plan tiles for ``dim`` (>= the input size)."""
+    target = plan.dims.get(dim, size)
+    if target < size:
+        raise ValueError(
+            f"{plan.kernel}: plan tiles {dim}={target} but the operand has "
+            f"{dim}={size}; re-plan for the actual shapes")
+    return target
+
+
+def _pad_axis(x, axis: int, target: int):
+    """Zero-pad ``x`` along ``axis`` up to ``target`` (no-op when equal)."""
+    have = x.shape[axis]
+    if have == target:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - have)
+    return jnp.pad(x, widths)
 
 
 def mfma_gemm(a, b, c, *, device=None, plan: Optional[TilePlan] = None,
               block_m: Optional[int] = None, block_n: Optional[int] = None,
-              block_k: Optional[int] = None,
+              block_k: Optional[int] = None, pad: bool = False,
               interpret: Optional[bool] = None):
-    blocks = _blocks("mfma_gemm", plan,
-                     {"M": a.shape[0], "N": b.shape[1], "K": a.shape[1]},
-                     a.dtype, device,
-                     dict(block_m=block_m, block_n=block_n, block_k=block_k))
-    return _gemm.mfma_gemm(a, b, c, **blocks,
-                           interpret=compat.resolve_interpret(interpret))
+    M, N, K = a.shape[0], b.shape[1], a.shape[1]
+    plan, blocks = _resolve("mfma_gemm", plan, {"M": M, "N": N, "K": K},
+                            a.dtype, device,
+                            dict(block_m=block_m, block_n=block_n,
+                                 block_k=block_k), pad)
+    if pad:
+        # zero rows/cols and zero contraction blocks are exact
+        Mp, Np, Kp = (_padded(plan, d, s)
+                      for d, s in (("M", M), ("N", N), ("K", K)))
+        a = _pad_axis(_pad_axis(a, 0, Mp), 1, Kp)
+        b = _pad_axis(_pad_axis(b, 0, Kp), 1, Np)
+        c = _pad_axis(_pad_axis(c, 0, Mp), 1, Np)
+    out = _gemm.mfma_gemm(a, b, c, **blocks,
+                          interpret=compat.resolve_interpret(interpret))
+    return out[:M, :N] if pad else out
 
 
-def flash_attention(q, k, v, *, causal=True, device=None,
+def flash_attention(q, k, v, *, causal=True, kv_len=None, device=None,
                     plan: Optional[TilePlan] = None,
                     block_q: Optional[int] = None,
-                    block_kv: Optional[int] = None,
+                    block_kv: Optional[int] = None, pad: bool = False,
                     interpret: Optional[bool] = None):
     B, S, H, hd = q.shape
-    blocks = _blocks("flash_attention", plan,
-                     {"B": B, "S": S, "T": k.shape[1], "H": H,
-                      "KV": k.shape[2], "hd": hd},
-                     q.dtype, device,
-                     dict(block_q=block_q, block_kv=block_kv))
-    return _fa.flash_attention(q, k, v, causal=causal, **blocks,
-                               interpret=compat.resolve_interpret(interpret))
+    T = k.shape[1]
+    plan, blocks = _resolve("flash_attention", plan,
+                            {"B": B, "S": S, "T": T, "H": H,
+                             "KV": k.shape[2], "hd": hd},
+                            q.dtype, device,
+                            dict(block_q=block_q, block_kv=block_kv), pad)
+    if pad:
+        # padded keys are masked via kv_len; padded query rows are sliced
+        Sp = _padded(plan, "S", S)
+        Tp = _padded(plan, "T", T)
+        q = _pad_axis(q, 1, Sp)
+        k = _pad_axis(k, 1, Tp)
+        v = _pad_axis(v, 1, Tp)
+        if kv_len is None and Tp != T:
+            kv_len = T
+    out = _fa.flash_attention(q, k, v, causal=causal, kv_len=kv_len,
+                              **blocks,
+                              interpret=compat.resolve_interpret(interpret))
+    return out[:, :S] if pad else out
 
 
 def decode_attention(q, k, v, kv_len, *, device=None,
                      plan: Optional[TilePlan] = None,
-                     block_kv: Optional[int] = None,
+                     block_kv: Optional[int] = None, pad: bool = False,
                      interpret: Optional[bool] = None):
     B, H, hd = q.shape
-    blocks = _blocks("decode_attention", plan,
-                     {"B": B, "T": k.shape[1], "H": H, "KV": k.shape[2],
-                      "hd": hd},
-                     q.dtype, device, dict(block_kv=block_kv))
+    T = k.shape[1]
+    plan, blocks = _resolve("decode_attention", plan,
+                            {"B": B, "T": T, "H": H, "KV": k.shape[2],
+                             "hd": hd},
+                            q.dtype, device, dict(block_kv=block_kv), pad)
+    if pad:
+        # the kernel's kv_len mask already ignores the padded cache tail
+        Tp = _padded(plan, "T", T)
+        k = _pad_axis(k, 1, Tp)
+        v = _pad_axis(v, 1, Tp)
     return _da.decode_attention(q, k, v, kv_len, **blocks,
                                 interpret=compat.resolve_interpret(interpret))
 
 
 def mamba2_ssd(x, dt, A, Bm, Cm, *, device=None,
                plan: Optional[TilePlan] = None,
-               chunk: Optional[int] = None,
+               chunk: Optional[int] = None, pad: bool = False,
                interpret: Optional[bool] = None):
     B, S, nh, hd = x.shape
-    blocks = _blocks("mamba2_ssd", plan,
-                     {"B": B, "S": S, "nh": nh, "hd": hd,
-                      "ds": Bm.shape[3]},
-                     x.dtype, device, dict(chunk=chunk))
-    return _ssd.mamba2_ssd(x, dt, A, Bm, Cm, **blocks,
-                           interpret=compat.resolve_interpret(interpret))
+    plan, blocks = _resolve("mamba2_ssd", plan,
+                            {"B": B, "S": S, "nh": nh, "hd": hd,
+                             "ds": Bm.shape[3]},
+                            x.dtype, device, dict(chunk=chunk), pad)
+    if pad:
+        # dt=0 padded steps are identity state updates (exp(0)=1 decay,
+        # zero input contribution), so the final state stays exact
+        Sp = _padded(plan, "S", S)
+        x = _pad_axis(x, 1, Sp)
+        dt = _pad_axis(dt, 1, Sp)
+        Bm = _pad_axis(Bm, 1, Sp)
+        Cm = _pad_axis(Cm, 1, Sp)
+    y, state = _ssd.mamba2_ssd(x, dt, A, Bm, Cm, **blocks,
+                               interpret=compat.resolve_interpret(interpret))
+    return (y[:, :S], state) if pad else (y, state)
 
 
 def moe_gmm(x, w, *, device=None, plan: Optional[TilePlan] = None,
             block_m: Optional[int] = None, block_n: Optional[int] = None,
-            block_k: Optional[int] = None,
+            block_k: Optional[int] = None, pad: bool = False,
             interpret: Optional[bool] = None):
     E, C, K = x.shape
-    blocks = _blocks("moe_gmm", plan,
-                     {"E": E, "C": C, "K": K, "N": w.shape[2]},
-                     x.dtype, device,
-                     dict(block_m=block_m, block_n=block_n, block_k=block_k))
-    return _gmm.moe_gmm(x, w, **blocks,
-                        interpret=compat.resolve_interpret(interpret))
+    N = w.shape[2]
+    plan, blocks = _resolve("moe_gmm", plan,
+                            {"E": E, "C": C, "K": K, "N": N},
+                            x.dtype, device,
+                            dict(block_m=block_m, block_n=block_n,
+                                 block_k=block_k), pad)
+    if pad:
+        # zero slot rows and zero contraction blocks are exact
+        Cp, Kp, Np = (_padded(plan, d, s)
+                      for d, s in (("C", C), ("K", K), ("N", N)))
+        x = _pad_axis(_pad_axis(x, 1, Cp), 2, Kp)
+        w = _pad_axis(_pad_axis(w, 1, Kp), 2, Np)
+    out = _gmm.moe_gmm(x, w, **blocks,
+                       interpret=compat.resolve_interpret(interpret))
+    return out[:, :C, :N] if pad else out

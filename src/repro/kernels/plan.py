@@ -197,7 +197,12 @@ class TilePlan:
     vmem_bytes: int              # estimated per-core working set
     vmem_budget: int             # the budget it was sized against
     align: int
-    padded: bool = False         # dims were rounded up (perf planning)
+    padded: bool = False         # dims were rounded up (pad=True planning)
+    #: dim name -> the (possibly padded) size the blocks tile.  With
+    #: ``pad=True`` these are the quantum-rounded sizes the ops-layer
+    #: wrappers pad inputs to (and slice outputs back from); with
+    #: ``pad=False`` they equal the problem dims.
+    dims: Mapping[str, int] = dataclasses.field(default_factory=dict)
 
     def kwargs(self) -> Dict[str, int]:
         """The block keyword arguments for the ops-layer call."""
@@ -315,7 +320,7 @@ def _plan(kernel: str, spec: DeviceSpec, dtype, *,
     return TilePlan(kernel=kernel, device=spec.name, dtype=str(dtype),
                     blocks=dict(chosen), grid=grid(sizes, chosen),
                     vmem_bytes=footprint(chosen, dsz), vmem_budget=budget,
-                    align=align, padded=pad)
+                    align=align, padded=pad, dims=dict(sizes))
 
 
 # ---------------------------------------------------------------------------

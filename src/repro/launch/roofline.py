@@ -132,7 +132,7 @@ def load_cells(dryrun_dir: str, mesh: str = "single",
 
 def _fmt(rows):
     hdr = (f"| {'arch':24s} | {'shape':11s} | compute_ms | memory_ms | "
-           f"collective_ms | dominant | MODEL/HLO | roofline |")
+           "collective_ms | dominant | MODEL/HLO | roofline |")
     sep = "|" + "-" * 26 + "|" + "-" * 13 + "|" + "-" * 12 + "|" + "-" * 11 \
         + "|" + "-" * 15 + "|" + "-" * 10 + "|" + "-" * 11 + "|" + "-" * 10 + "|"
     out = [hdr, sep]

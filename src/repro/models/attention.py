@@ -12,6 +12,15 @@ Memory/sharding design (dry-run-validated on the (16,16) production mesh):
   O(S x T).  The Pallas `flash_attention` kernel implements the same
   contract for real TPUs; this XLA formulation is the GSPMD-shardable
   reference the dry-run compiles.
+* Dual execution path: with ``cfg.use_pallas`` the :func:`attention`
+  entry point routes through ``repro.kernels.dispatch`` to the Pallas
+  kernels — ``kernels.flash_attention`` for the train/prefill step and
+  ``kernels.decode_attention`` for the single-token KV-cache step —
+  padding ragged (non-128-multiple) shapes via the ops-layer
+  pad/mask/slice path.  Anything the kernel contract cannot express
+  (mesh-sharded execution, MLA's ``v_head_dim != qk_dim``, a custom
+  softmax scale, unplannable shapes) falls back to the XLA reference
+  below with a logged reason, so the flag is always safe to set.
 * Query heads are TP-sharded when `n_heads` divides the model axis
   (mistral 32H, internlm2 48H, llama-vision 64H, ...).  When they do not
   (yi 56H, qwen2 28H, whisper 8H), we instead shard the *query sequence*
@@ -30,6 +39,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch as kdispatch
+from repro.kernels import ops as kops
 from repro.models.config import ModelConfig
 from repro.models.layers import cdtype, dense, mm, norm_apply, rope
 from repro.parallel.api import current_mesh, shard
@@ -143,22 +154,75 @@ def _flash_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
     return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)  # b h s d -> b s h d
 
 
+def _attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, scale: float,
+                      kv_len: Optional[jax.Array],
+                      device: Optional[str] = None) -> Optional[jax.Array]:
+    """Try the Pallas kernel path; ``None`` means "use the XLA reference".
+
+    Dispatch happens at trace time on static shapes: ``flash_attention``
+    for S > 1 (train/prefill), ``decode_attention`` for the S == 1
+    KV-cache step.  Ragged shapes run via the ops-layer ``pad=True``
+    path (padded keys are ``kv_len``-masked, padded query rows sliced).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    kernel = "flash_attention" if S > 1 else "decode_attention"
+    if v.shape[-1] != hd:
+        kdispatch.fallback(
+            kernel, f"v head dim {v.shape[-1]} != query head dim {hd} "
+                    "(MLA-style asymmetric heads)")
+        return None
+    if abs(scale * math.sqrt(hd) - 1.0) > 1e-6:
+        kdispatch.fallback(
+            kernel, f"custom softmax scale {scale:g} != 1/sqrt(hd)")
+        return None
+    sharded = current_mesh() is not None
+    if S > 1:
+        dec = kdispatch.decide(
+            "flash_attention",
+            {"B": B, "S": S, "T": T, "H": H, "KV": KV, "hd": hd},
+            dtype=q.dtype, device=device, sharded=sharded)
+        if not dec.use_kernel:
+            return None
+        return kops.flash_attention(q, k, v, causal=causal, kv_len=kv_len,
+                                    plan=dec.plan, pad=True)
+    dec = kdispatch.decide(
+        "decode_attention", {"B": B, "T": T, "H": H, "KV": KV, "hd": hd},
+        dtype=q.dtype, device=device, sharded=sharded)
+    if not dec.use_kernel:
+        return None
+    kl = jnp.asarray(T, jnp.int32) if kv_len is None else kv_len
+    return kops.decode_attention(q[:, 0], k, v, kl, plan=dec.plan,
+                                 pad=True)[:, None]
+
+
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
               scale: Optional[float] = None,
-              kv_len: Optional[jax.Array] = None) -> jax.Array:
+              kv_len: Optional[jax.Array] = None,
+              use_pallas: bool = False,
+              pallas_device: Optional[str] = None) -> jax.Array:
     """Grouped attention entry point.  q: (B,S,H,hd); k/v: (B,T,KV,hd).
 
     KV heads are expanded to the full H before the attention math (a
     (KV, G) reshape would break head sharding whenever KV < the model
     axis — yi/jamba/qwen3 all hit that); GQA's memory win lives in the
-    KV *cache*, not the transient compute tensors.  Dispatches to the
-    blockwise path for long KV (training/prefill); plain einsum otherwise
-    (short KV, and decode where S == 1 keeps logits tiny).
+    KV *cache*, not the transient compute tensors.  With ``use_pallas``
+    the Pallas kernels are tried first (``repro.kernels.dispatch`` falls
+    back here when they cannot support the op).  The XLA reference
+    dispatches to the blockwise path for long KV (training/prefill);
+    plain einsum otherwise (short KV, and decode where S == 1 keeps
+    logits tiny).
     """
     B, S, H, hd = q.shape
     T, KV = k.shape[1], k.shape[2]
     G = H // KV
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if use_pallas:
+        out = _attention_kernel(q, k, v, causal=causal, scale=scale,
+                                kv_len=kv_len, device=pallas_device)
+        if out is not None:
+            return out
     use_flash = T >= _FLASH_MIN_T and S > 1
     if G > 1 and not use_flash:
         k = jnp.repeat(k, G, axis=2)   # flash expands per block instead
@@ -243,7 +307,8 @@ def attn_train(cfg: ModelConfig, w, x: jax.Array,
                positions: jax.Array, *, causal: bool = True) -> jax.Array:
     B, S, D = x.shape
     q, k, v = _qkv(cfg, w, x, positions)
-    out = attention(q, k, v, causal=causal)
+    out = attention(q, k, v, causal=causal, use_pallas=cfg.use_pallas,
+                    pallas_device=cfg.pallas_device)
     out = _shard_q(out)
     return dense(out.reshape(B, S, cfg.n_heads * cfg.hd), w["wo"])
 
@@ -269,7 +334,9 @@ def attn_decode(cfg: ModelConfig, w, x: jax.Array, cache: Dict,
     v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, pos, 0, 0))
     k = shard(k, *_cache_spec())
     v = shard(v, *_cache_spec())
-    out = attention(q, k, v, causal=False, kv_len=pos + 1)
+    out = attention(q, k, v, causal=False, kv_len=pos + 1,
+                    use_pallas=cfg.use_pallas,
+                    pallas_device=cfg.pallas_device)
     y = dense(out.reshape(B, S, cfg.n_heads * cfg.hd), w["wo"])
     return y, {"k": k, "v": v}
 
@@ -323,7 +390,9 @@ def _mla_attend(cfg: ModelConfig, w, x, c_kv, k_rope, positions, *,
     k_full = _shard_kv(jnp.concatenate([k_nope, k_rope_h], axis=-1))
     v = _shard_kv(v)
     out = attention(q_full, k_full, v, causal=causal,
-                    scale=1.0 / math.sqrt(qk), kv_len=kv_len)
+                    scale=1.0 / math.sqrt(qk), kv_len=kv_len,
+                    use_pallas=cfg.use_pallas,
+                    pallas_device=cfg.pallas_device)
     return dense(out.reshape(B, S, H * m.v_head_dim), w["wo"])
 
 
@@ -377,7 +446,8 @@ def cross_train(cfg: ModelConfig, w, x: jax.Array,
     H, hd = cfg.n_heads, cfg.hd
     q = _shard_q(dense(x, w["wq"]).reshape(B, S, H, hd))
     k, v = cross_kv(cfg, w, media)
-    out = attention(q, k, v, causal=False)
+    out = attention(q, k, v, causal=False, use_pallas=cfg.use_pallas,
+                    pallas_device=cfg.pallas_device)
     return dense(out.reshape(B, S, H * hd), w["wo"])
 
 
@@ -387,5 +457,7 @@ def cross_decode(cfg: ModelConfig, w, x: jax.Array,
     B, S, D = x.shape
     H, hd = cfg.n_heads, cfg.hd
     q = dense(x, w["wq"]).reshape(B, S, H, hd)
-    out = attention(q, kv[0], kv[1], causal=False)
+    out = attention(q, kv[0], kv[1], causal=False,
+                    use_pallas=cfg.use_pallas,
+                    pallas_device=cfg.pallas_device)
     return dense(out.reshape(B, S, H * hd), w["wo"])

@@ -13,6 +13,12 @@ periods with per-slot weight stacks, so the compiled HLO stays small for
 Every block is pre-norm with residuals:  h += mixer(norm(h));
 h += ffn(norm(h)); whisper decoder inserts a cross-attention sub-block.
 Cross layers carry a learned tanh gate (llama-3.2-vision style).
+
+Mixer execution path: the attention/SSD/MoE calls below read
+``cfg.use_pallas`` — when set, each catalog-backed op dispatches to the
+``repro.kernels`` Pallas layer (falling back per op, with a logged
+reason, whenever the kernel contract cannot express it).  Nothing at the
+block level changes: the dual path lives inside the mixers.
 """
 
 from __future__ import annotations
@@ -257,6 +263,8 @@ def _ssm_prefill_cache(cfg: ModelConfig, w, x):
     Cg = Cm2.reshape(B, S, s.n_groups, s.d_state)
     dt = jax.nn.softplus(dtr.astype(jnp.float32) + w["dt_bias"])
     A = -jnp.exp(w["A_log"])
-    _, h_final = ssm_mod.ssd_chunked(xh, dt, A, Bg, Cg, s.chunk)
+    _, h_final = ssm_mod.ssd_chunked(xh, dt, A, Bg, Cg, s.chunk,
+                                     use_pallas=cfg.use_pallas,
+                                     pallas_device=cfg.pallas_device)
     return {"conv": xbc_raw[:, S - (s.d_conv - 1):, :],
             "state": h_final}

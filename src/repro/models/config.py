@@ -9,7 +9,7 @@ variant required by the assignment (small layers/width/experts, same family).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 __all__ = ["ModelConfig", "MoESpec", "MLASpec", "SSMSpec", "CrossAttnSpec",
            "EncoderSpec"]
@@ -96,6 +96,18 @@ class ModelConfig:
     remat: str = "full"          # full | dots | none  (activation ckpt policy)
     scan_layers: bool = True
     microbatches: int = 1        # train-step gradient-accumulation factor
+    # route catalog-backed mixer ops (attention train+decode, SSD, MoE
+    # expert matmuls) through the repro.kernels Pallas layer instead of
+    # the XLA reference formulations.  Dispatch is per-op via
+    # repro.kernels.dispatch: anything the kernel path cannot support
+    # (mesh-sharded execution, unplannable shapes, MLA's asymmetric head
+    # dims) falls back to the reference with a logged reason.
+    use_pallas: bool = False
+    # repro.arch registry name the kernel tile plans are derived for
+    # (mxu_dim alignment + vmem_bytes budget).  None -> the planner's
+    # default TPU; set this to the executing device's registry entry so
+    # tiles are sized against its actual VMEM.
+    pallas_device: Optional[str] = None
     # gradient-accumulation dtype: f32 default; bf16 halves the accumulator
     # buffer AND the cross-device gradient reduction wire bytes at ~3 bits
     # of accumulated-mantissa cost (used by the largest MoE config)

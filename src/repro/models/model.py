@@ -17,12 +17,11 @@ the assignment: inputs are precomputed frame/patch embeddings.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import blocks
 from repro.models.blocks import (Sig, apply_layer, init_layer,
                                  init_layer_cache, init_norm, layer_sigs,
                                  schedule)
@@ -354,7 +353,6 @@ def decode_step(cfg: ModelConfig, params, cache: Dict, tokens: jax.Array,
                 pos: jax.Array) -> Tuple[jax.Array, Dict]:
     """One decode step.  tokens (B, 1) int32; pos scalar int32 (current
     write index = number of tokens already in the cache)."""
-    B = tokens.shape[0]
     first_k, period, n_periods = schedule(cfg)
     sigs = layer_sigs(cfg)
     h = _embed_in(cfg, params, tokens, pos0=pos)

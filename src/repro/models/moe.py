@@ -16,6 +16,15 @@ GSPMD inserts the all-to-all-class collective — the EP communication the
 paper's scoreboard would attribute to the interconnect, and a hillclimb
 target.  Capacity drops follow Switch semantics (first-come within the
 group, position >= C dropped).
+
+Dual execution path: with ``cfg.use_pallas`` the three expert matmuls
+(gate/up/down projections over the (E, C, D) slot buffers) route through
+``repro.kernels.dispatch`` to the ``kernels.moe_gmm`` grouped-GEMM Pallas
+kernel — the batch groups fold into the per-expert row dim, and
+capacity-trimmed (non-128-multiple) C plus ragged D/F pad via the
+ops-layer zero-pad/slice path, which is exact for a GEMM.  Mesh-sharded
+execution or unplannable shapes fall back to the einsum with a logged
+reason.
 """
 
 from __future__ import annotations
@@ -26,9 +35,11 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch as kdispatch
+from repro.kernels import ops as kops
 from repro.models.config import ModelConfig
 from repro.models.layers import cdtype, dense, mm
-from repro.parallel.api import shard
+from repro.parallel.api import current_mesh, shard
 
 __all__ = ["init_moe", "moe_apply", "router_topk", "capacity"]
 
@@ -110,6 +121,34 @@ def _slot_maps(cfg: ModelConfig, idx: jax.Array, C: int):
         shard(used, "batch", "expert")
 
 
+def _expert_mm(x4: jax.Array, w3: jax.Array, *, use_pallas: bool,
+               device=None, out_dtype=None) -> jax.Array:
+    """Per-expert batched matmul (B, E, C, K) @ (E, K, N) -> (B, E, C, N).
+
+    f32 accumulation either way.  With ``use_pallas`` the batch groups
+    fold into the per-expert row dim and the op dispatches to the
+    ``moe_gmm`` grouped-GEMM kernel (ragged C/K/N zero-pad exactly);
+    otherwise (or on fallback) the E-sharded einsum runs.
+    """
+    if use_pallas:
+        B, E, C, K = x4.shape
+        N = w3.shape[2]
+        dec = kdispatch.decide(
+            "moe_gmm", {"E": E, "C": B * C, "K": K, "N": N},
+            dtype=x4.dtype, device=device,
+            sharded=current_mesh() is not None)
+        if dec.use_kernel:
+            xe = x4.transpose(1, 0, 2, 3).reshape(E, B * C, K)
+            y = kops.moe_gmm(xe, w3, plan=dec.plan, pad=True)
+            y = y.reshape(E, B, C, N).transpose(1, 0, 2, 3)
+            # the kernel accumulates in f32 but stores in x4.dtype, so
+            # (unlike mm's true-f32 output) the bf16 path takes one extra
+            # rounding here before the f32 gate math — covered by the
+            # bf16 parity tolerance
+            return y.astype(jnp.float32 if out_dtype is None else out_dtype)
+    return mm("beck,ekn->becn", x4, w3, out_dtype=out_dtype)
+
+
 def moe_apply(cfg: ModelConfig, w, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (y, aux_loss).  Groups = batch rows."""
     m = cfg.moe
@@ -133,12 +172,16 @@ def moe_apply(cfg: ModelConfig, w, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     xbuf = xbuf.reshape(B, E, C, D)
     xbuf = shard(xbuf, "batch", "expert", None, None)
 
-    # expert FFN (E-sharded batched einsum; f32 accumulation)
-    h = jax.nn.silu(mm("becd,edf->becf", xbuf, w["we_g"])) * \
-        mm("becd,edf->becf", xbuf, w["we_i"])
+    # expert FFN (E-sharded batched einsum, or the moe_gmm grouped-GEMM
+    # kernel under cfg.use_pallas; f32 accumulation either way)
+    h = jax.nn.silu(_expert_mm(xbuf, w["we_g"], use_pallas=cfg.use_pallas,
+                               device=cfg.pallas_device)) \
+        * _expert_mm(xbuf, w["we_i"], use_pallas=cfg.use_pallas,
+                     device=cfg.pallas_device)
     h = h.astype(x.dtype)
     h = shard(h, "batch", "expert", None, None)
-    ybuf = mm("becf,efd->becd", h, w["we_o"], out_dtype=x.dtype)
+    ybuf = _expert_mm(h, w["we_o"], use_pallas=cfg.use_pallas,
+                      device=cfg.pallas_device, out_dtype=x.dtype)
     # §Perf: reshard E@model -> D@model here (an all-to-all: each device
     # keeps 1/|model| of ybuf) so the combine gather below is LOCAL in its
     # passthrough dim.  Leaving ybuf expert-sharded makes GSPMD all-gather

@@ -6,6 +6,13 @@ part the Pallas ``mamba2_ssd`` kernel tiles for VMEM), linear-cost state
 recurrence *across* chunks (lax.scan carry, f32).  O(S) overall — this is
 why the SSM/hybrid architectures run the long_500k shape.
 
+Dual execution path: with ``cfg.use_pallas``, :func:`ssd_chunked` routes
+through ``repro.kernels.dispatch`` to the ``kernels.mamba2_ssd`` Pallas
+kernel (the planner picks the chunk — chunked SSD is exact at any chunk
+size — and ragged S is zero-padded with ``dt=0`` identity steps).  A
+carried initial state, mesh-sharded execution, or unplannable shapes
+fall back to the XLA chunked scan below with a logged reason.
+
 Shapes: x (B,S,nh,hd); B/C (B,S,G,ds) shared per group; dt (B,S,nh);
 state carry (B,nh,hd,ds).
 """
@@ -13,14 +20,16 @@ state carry (B,nh,hd,ds).
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch as kdispatch
+from repro.kernels import ops as kops
 from repro.models.config import ModelConfig
 from repro.models.layers import cdtype, dense
-from repro.parallel.api import shard
+from repro.parallel.api import current_mesh, shard
 
 __all__ = ["init_ssm", "ssm_train", "ssm_decode", "init_ssm_cache",
            "ssd_chunked", "ssd_step", "d_inner_of"]
@@ -81,14 +90,46 @@ def _conv_train(w, x: jax.Array, d_conv: int) -> jax.Array:
     return jax.nn.silu(y).astype(x.dtype)
 
 
+def _ssd_kernel_path(x, dt, A, Bm, Cm, h0,
+                     device=None) -> Optional[Tuple[jax.Array,
+                                                    jax.Array]]:
+    """Try the Pallas ``mamba2_ssd`` kernel; ``None`` -> XLA scan.
+
+    The planner picks the chunk (chunked SSD is exact at any chunk size,
+    pinned by ``test_property_chunk_invariance``); ragged S is padded
+    with ``dt=0`` identity steps, so the final state stays exact.
+    """
+    B, S, nh, hd = x.shape
+    ds = Bm.shape[3]
+    if h0 is not None:
+        kdispatch.fallback(
+            "mamba2_ssd", "carried initial state h0 is not part of the "
+                          "kernel contract (prefill-continuation path)")
+        return None
+    dec = kdispatch.decide(
+        "mamba2_ssd", {"B": B, "S": S, "nh": nh, "hd": hd, "ds": ds},
+        dtype=x.dtype, device=device, sharded=current_mesh() is not None)
+    if not dec.use_kernel:
+        return None
+    return kops.mamba2_ssd(x, dt, A, Bm, Cm, plan=dec.plan, pad=True)
+
+
 def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
                 Cm: jax.Array, chunk: int,
-                h0: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+                h0: jax.Array = None, *,
+                use_pallas: bool = False,
+                pallas_device=None) -> Tuple[jax.Array, jax.Array]:
     """Chunked SSD scan.
 
     x (B,S,nh,hd); dt (B,S,nh) f32 (post-softplus); A (nh,) f32 (negative);
     Bm/Cm (B,S,G,ds).  Returns y (B,S,nh,hd) and final state (B,nh,hd,ds) f32.
+    With ``use_pallas`` the Pallas kernel is tried first (dispatch falls
+    back here when it cannot support the op).
     """
+    if use_pallas:
+        out = _ssd_kernel_path(x, dt, A, Bm, Cm, h0, device=pallas_device)
+        if out is not None:
+            return out
     B, S, nh, hd = x.shape
     G, ds = Bm.shape[2], Bm.shape[3]
     S_orig = S
@@ -194,7 +235,9 @@ def ssm_train(cfg: ModelConfig, w, x: jax.Array) -> jax.Array:
     dt = jax.nn.softplus(dtr.astype(jnp.float32) + w["dt_bias"])
     dt = shard(dt, "batch", None, "heads")
     A = -jnp.exp(w["A_log"])
-    y, _ = ssd_chunked(xh, dt, A, Bg, Cg, s.chunk)
+    y, _ = ssd_chunked(xh, dt, A, Bg, Cg, s.chunk,
+                       use_pallas=cfg.use_pallas,
+                       pallas_device=cfg.pallas_device)
     y = y + w["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
     y = shard(y.reshape(B, S, d_in).astype(x.dtype), "batch", None, "tp")
     return dense(_gated_norm(cfg, w["norm"], y, z), w["out_proj"])

@@ -14,12 +14,11 @@ slow DCN link (vs. per-layer weight gathers under cross-pod ZeRO-3).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 __all__ = ["gpipe_apply", "bubble_fraction"]

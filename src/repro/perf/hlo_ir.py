@@ -28,7 +28,7 @@ import dataclasses
 import hashlib
 import re
 from collections import defaultdict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 __all__ = [
     "BYTES_PER_ELEM", "DotOp", "KernelOp", "KernelGraph",

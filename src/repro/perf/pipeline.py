@@ -78,7 +78,7 @@ def as_graph(workload, *, tpu_correct: bool = True) -> KernelGraph:
             key=f"{rec.get('arch', '?')}/{rec.get('shape', '?')}")
     if isinstance(workload, str):
         return cache.parse_cached(workload, tpu_correct=tpu_correct)
-    raise TypeError(f"cannot interpret workload of type "
+    raise TypeError("cannot interpret workload of type "
                     f"{type(workload).__name__}; pass HLO text, a "
                     "KernelGraph, or a dry-run .json path")
 

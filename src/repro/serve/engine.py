@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.model import decode_step, init_cache, prefill
+from repro.models.model import decode_step, prefill
 
 __all__ = ["ServeEngine", "GenerateResult"]
 
@@ -53,7 +53,7 @@ class ServeEngine:
                 f"request does not fit its bucket: prompt length {S} + "
                 f"n_steps {n_steps} = {S + n_steps} exceeds this engine's "
                 f"max_len bucket of {self.max_len} (prefill/decode are "
-                f"jitted per (batch, max_len) bucket; build a ServeEngine "
+                "jitted per (batch, max_len) bucket; build a ServeEngine "
                 f"with max_len >= {S + n_steps} or shorten the request)")
         batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
         if extras:

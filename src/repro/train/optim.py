@@ -41,8 +41,8 @@ def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
 
 
 def init_opt_state(params) -> Dict[str, Any]:
-    zeros = lambda p: jax.tree.map(
-        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    def zeros(p):
+        return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
     return {"m": zeros(params), "v": zeros(params),
             "step": jnp.zeros((), jnp.int32)}
 

@@ -8,9 +8,9 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config
-from repro.models import init_params, loss_fn
-from repro.models.model import decode_step, init_cache, prefill
-from repro.train.optim import OptConfig, adamw_update, init_opt_state
+from repro.models import init_params
+from repro.models.model import decode_step, prefill
+from repro.train.optim import OptConfig, init_opt_state
 from repro.train.step import make_train_step
 
 B, S = 2, 64

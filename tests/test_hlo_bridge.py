@@ -7,7 +7,6 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import hlo_bridge as hb
-from repro.core import isa
 from repro.core.machine import get_machine
 
 

@@ -116,6 +116,43 @@ def test_kernel_matches_model_path():
 
 
 # ---------------------------------------------------------------------------
+# Ragged tails: pad=True pads q/k/v, masks padded keys via kv_len, and
+# slices padded query rows back off
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,causal", [(100, True), (100, False), (64, True)])
+def test_flash_ragged_pad(S, causal):
+    q, k, v = _qkv(1, S, S, 4, 2, 32, jnp.float32)
+    y = ops.flash_attention(q, k, v, causal=causal, pad=True)
+    assert y.shape == q.shape
+    yr = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_flash_kv_len_masks_tail():
+    """An explicit kv_len < T (prefill against a longer cache) masks."""
+    q, k, v = _qkv(1, 128, 256, 4, 4, 32, jnp.float32)
+    y = ops.flash_attention(q, k, v, causal=False, kv_len=jnp.int32(200),
+                            block_q=128, block_kv=128)
+    yr = ref.flash_attention_ref(q, k[:, :200], v[:, :200], causal=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_decode_ragged_cache_pad():
+    """A 100-slot (non-128-multiple) cache pads; kv_len masks the tail."""
+    B, T, H, KV, hd = 2, 100, 4, 2, 32
+    q = jnp.asarray(RNG.randn(B, H, hd), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, T, KV, hd), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, T, KV, hd), jnp.float32)
+    y = ops.decode_attention(q, k, v, jnp.int32(77), pad=True)
+    yr = ref.decode_attention_ref(q, k, v, jnp.int32(77))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-3,
+                               atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
 # Tiling contract: misalignment raises instead of silently clamping
 # ---------------------------------------------------------------------------
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.arch import get_device, list_devices
 from repro.kernels import get_kernel, list_kernels, plan_for
-from repro.kernels.plan import tile_align, vmem_budget
+from repro.kernels.plan import tile_align
 
 RNG = np.random.RandomState(42)
 
@@ -154,3 +154,73 @@ def test_plan_unknown_override_rejected():
     with pytest.raises(ValueError, match="unknown block override"):
         plan_for("decode_attention",
                  {"B": 1, "T": 256, "H": 4, "KV": 2, "hd": 32}, block_m=128)
+
+
+# ---------------------------------------------------------------------------
+# Ragged-tail planning: pad=True models padded execution; pad=False keeps
+# the descriptive ValueError contract
+# ---------------------------------------------------------------------------
+
+#: Sub-128 and non-divisor shapes real model configs produce (odd seq
+#: lengths, capacity-trimmed MoE groups, small smoke dims).
+RAGGED_SHAPES = {
+    "mfma_gemm": {"M": 100, "N": 60, "K": 200},
+    "moe_gmm": {"E": 4, "C": 20, "K": 100, "N": 60},
+    "flash_attention": {"B": 1, "S": 100, "T": 100, "H": 4, "KV": 2,
+                        "hd": 32},
+    "decode_attention": {"B": 2, "T": 100, "H": 4, "KV": 2, "hd": 32},
+    "mamba2_ssd": {"B": 1, "S": 52, "nh": 2, "hd": 16, "ds": 16},
+}
+
+#: dim name -> (block keyword tiling it, quantum class): "mxu" aligns to
+#: tile_align(spec); "sublane" to 8.
+_RAGGED_DIMS = {
+    "mfma_gemm": {"M": ("block_m", "mxu"), "N": ("block_n", "mxu"),
+                  "K": ("block_k", "mxu")},
+    "moe_gmm": {"C": ("block_m", "mxu"), "K": ("block_k", "mxu"),
+                "N": ("block_n", "mxu")},
+    "flash_attention": {"S": ("block_q", "mxu"), "T": ("block_kv", "mxu")},
+    "decode_attention": {"T": ("block_kv", "mxu")},
+    "mamba2_ssd": {"S": ("chunk", "sublane")},
+}
+
+
+@pytest.mark.parametrize("kernel", sorted(RAGGED_SHAPES))
+def test_ragged_plan_pads_and_records_mask_metadata(kernel):
+    """pad=True: every planned dim is rounded up to its quantum, blocks
+    tile the PADDED sizes, and the plan records the padded geometry
+    (``dims`` + ``padded=True``) the ops-layer pad/mask/slice path needs."""
+    shapes = RAGGED_SHAPES[kernel]
+    spec = get_device(DEVICES[0])
+    plan = plan_for(kernel, shapes, dtype="float32", device=spec, pad=True)
+    assert plan.padded
+    align = tile_align(spec)
+    for dim, (block_name, klass) in _RAGGED_DIMS[kernel].items():
+        q = align if klass == "mxu" else 8
+        padded = plan.dims[dim]
+        assert padded >= shapes[dim]
+        assert padded % q == 0, (dim, plan)
+        assert padded - shapes[dim] < q                   # minimal padding
+        assert padded % plan.blocks[block_name] == 0, (dim, plan)
+
+
+@pytest.mark.parametrize("kernel", sorted(RAGGED_SHAPES))
+def test_ragged_plan_without_pad_keeps_error_contract(kernel):
+    """pad=False: the same shapes raise a descriptive ValueError naming
+    an offending dim WITH its size (no silent clamping, no padding)."""
+    shapes = RAGGED_SHAPES[kernel]
+    named_dim = "|".join(f"{d}={shapes[d]}" for d in _RAGGED_DIMS[kernel])
+    with pytest.raises(ValueError, match=named_dim) as err:
+        plan_for(kernel, shapes, dtype="float32",
+                 device=DEVICES[0], pad=False)
+    assert "pad" in str(err.value)       # the message points at the fix
+
+
+def test_aligned_plan_pad_true_is_identity():
+    """pad=True on already-aligned shapes changes nothing but the flag."""
+    aligned = plan_for("mfma_gemm", SHAPES["mfma_gemm"], dtype="float32")
+    padded = plan_for("mfma_gemm", SHAPES["mfma_gemm"], dtype="float32",
+                      pad=True)
+    assert padded.blocks == aligned.blocks
+    assert padded.dims == dict(SHAPES["mfma_gemm"])
+    assert padded.grid == aligned.grid

@@ -89,6 +89,35 @@ def test_moe_gmm_expert_isolation():
 
 
 # ---------------------------------------------------------------------------
+# Ragged tails: pad=True zero-pads onto the MXU contract and slices back
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,k", [(100, 60, 200), (64, 64, 64),
+                                   (130, 128, 250)])
+def test_mfma_gemm_ragged_pad(m, n, k):
+    """Zero row/col/contraction padding is exact for the accumulate-GEMM."""
+    a = jnp.asarray(RNG.randn(m, k), jnp.float32)
+    b = jnp.asarray(RNG.randn(k, n), jnp.float32)
+    c = jnp.asarray(RNG.randn(m, n), jnp.float32)
+    y = ops.mfma_gemm(a, b, c, pad=True)
+    assert y.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.mfma_gemm_ref(a, b, c)),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_moe_gmm_ragged_pad():
+    """Capacity-trimmed C (a multiple of 4, not 128) runs the kernel."""
+    x = jnp.asarray(RNG.randn(4, 20, 100), jnp.float32)
+    w = jnp.asarray(RNG.randn(4, 100, 60), jnp.float32)
+    y = ops.moe_gmm(x, w, pad=True)
+    assert y.shape == (4, 20, 60)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.moe_gmm_ref(x, w)),
+                               rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
 # Tiling contract: misalignment raises instead of silently clamping
 # ---------------------------------------------------------------------------
 

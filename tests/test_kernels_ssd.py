@@ -53,6 +53,19 @@ def test_ssd_non_divisible_chunk_raises():
         ops.mamba2_ssd(x, dt, A, Bm, Cm, chunk=48)
 
 
+def test_ssd_ragged_pad():
+    """Non-sublane-multiple S pads with dt=0 identity steps: y matches
+    and the final state is NOT polluted by the padded tail."""
+    x, dt, A, Bm, Cm = _inputs(2, 52, 2, 16, 1, 16)
+    y, h = ops.mamba2_ssd(x, dt, A, Bm, Cm, pad=True)
+    assert y.shape == x.shape
+    yr, hr = ref.mamba2_ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=2e-3,
+                               atol=2e-3)
+
+
 def test_model_ssd_chunked_vs_sequential():
     """The model's XLA chunked scan == sequential oracle."""
     x, dt, A, Bm, Cm = _inputs(2, 96, 4, 16, 1, 24)

@@ -4,7 +4,7 @@ import pytest
 
 from repro.core.machine import get_machine
 from repro.core.microbench import (build_listing1, eq1_latency,
-                                   measure_latency, t_total)
+                                   measure_latency)
 from repro.core.scoreboard import simulate_program
 
 M = get_machine("mi200")

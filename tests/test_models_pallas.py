@@ -1,0 +1,243 @@
+"""Model <-> kernel parity: the ``use_pallas=`` execution path.
+
+Every catalog-backed mixer (attention train + decode, chunked SSD, MoE
+grouped GEMM) must produce the same output under ``use_pallas=True``
+(interpret-mode Pallas kernels) as the XLA reference formulation, within
+dtype tolerance — including ragged (non-128-multiple) shapes, which run
+the kernel path via ``plan_for(..., pad=True)`` + the ops-layer
+pad/mask/slice plumbing.  ``repro.kernels.dispatch`` decision records are
+asserted so a silent fallback can never masquerade as parity; the
+contract-mismatch cases (MLA's asymmetric head dims, mesh-sharded
+execution) must fall back with a descriptive reason and bit-identical
+reference output.  This is the ``models-pallas`` CI job.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch as kdispatch
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import MLASpec, ModelConfig, MoESpec, SSMSpec
+
+KEY = jax.random.PRNGKey(0)
+
+_TOL = {"float32": dict(rtol=2e-3, atol=2e-3),
+        "bfloat16": dict(rtol=5e-2, atol=5e-2)}
+
+
+def _cfg(dtype="float32", **kw) -> ModelConfig:
+    base = dict(name="pallas-parity", family="dense", n_layers=2,
+                d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                vocab_size=512, head_dim=32, dtype=dtype)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _pair(cfg):
+    """(reference cfg, use_pallas cfg) sharing everything else."""
+    return cfg, dataclasses.replace(cfg, use_pallas=True)
+
+
+def _assert_kernel_used(kernel: str):
+    dec = kdispatch.last_decisions().get(kernel)
+    assert dec is not None, f"{kernel}: no dispatch decision recorded"
+    assert dec.use_kernel, f"{kernel}: fell back ({dec.reason})"
+    assert dec.plan is not None and dec.plan.kernel == kernel
+
+
+def _close(got, want, dtype):
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# attention: train + decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,dtype", [(128, "float32"), (100, "float32"),
+                                     (100, "bfloat16")])
+def test_attn_train_parity(S, dtype):
+    """S=100 is the ragged case: kernel runs via pad + kv_len mask."""
+    cfg, cfgp = _pair(_cfg(dtype=dtype))
+    w = attn.init_attn(cfg, KEY)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, S, cfg.d_model),
+                          jnp.float32).astype(x_dtype(cfg))
+    pos = jnp.arange(S)
+    kdispatch.reset_decisions()
+    y_pal = attn.attn_train(cfgp, w, x, pos)
+    _assert_kernel_used("flash_attention")
+    y_ref = attn.attn_train(cfg, w, x, pos)
+    _close(y_pal, y_ref, dtype)
+
+
+def x_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+@pytest.mark.parametrize("max_len", [128, 100])
+def test_attn_decode_parity(max_len):
+    """max_len=100 is the ragged KV cache: padded tail is kv_len-masked."""
+    cfg, cfgp = _pair(_cfg())
+    w = attn.init_attn(cfg, KEY)
+    cache = attn.init_attn_cache(cfg, 2, max_len)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 1, cfg.d_model),
+                          jnp.float32)
+    kdispatch.reset_decisions()
+    y_pal, c_pal = attn.attn_decode(cfgp, w, x, cache, jnp.int32(37))
+    _assert_kernel_used("decode_attention")
+    y_ref, c_ref = attn.attn_decode(cfg, w, x, cache, jnp.int32(37))
+    _close(y_pal, y_ref, "float32")
+    np.testing.assert_array_equal(np.asarray(c_pal["k"]),
+                                  np.asarray(c_ref["k"]))
+
+
+def test_decode_kernel_ignores_stale_cache_tail():
+    """Positions >= kv_len (unwritten cache garbage) must not leak in."""
+    cfg, cfgp = _pair(_cfg())
+    w = attn.init_attn(cfg, KEY)
+    cache = attn.init_attn_cache(cfg, 1, 100)
+    cache = {"k": cache["k"].at[:, 50:].set(1e4),
+             "v": cache["v"].at[:, 50:].set(-1e4)}
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 1, cfg.d_model),
+                          jnp.float32)
+    y_pal, _ = attn.attn_decode(cfgp, w, x, cache, jnp.int32(20))
+    y_ref, _ = attn.attn_decode(cfg, w, x, cache, jnp.int32(20))
+    _close(y_pal, y_ref, "float32")
+
+
+@pytest.mark.parametrize("M", [128, 48])
+def test_cross_attention_parity(M):
+    """Non-causal kernel path; M=48 exercises the ragged KV mask."""
+    cfg, cfgp = _pair(_cfg())
+    w = attn.init_cross(cfg, KEY)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 100, cfg.d_model),
+                          jnp.float32)
+    media = jax.random.normal(jax.random.PRNGKey(4), (1, M, cfg.d_model),
+                              jnp.float32)
+    kdispatch.reset_decisions()
+    y_pal = attn.cross_train(cfgp, w, x, media)
+    _assert_kernel_used("flash_attention")
+    y_ref = attn.cross_train(cfg, w, x, media)
+    _close(y_pal, y_ref, "float32")
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S", [64, 52])
+def test_ssm_train_parity(S):
+    """S=52 is the ragged case: dt=0 identity-step padding."""
+    cfg = _cfg(family="ssm", d_model=64, d_ff=0,
+               ssm=SSMSpec(d_state=16, head_dim=16, chunk=32))
+    cfg, cfgp = _pair(cfg)
+    w = ssm_mod.init_ssm(cfg, KEY)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, S, cfg.d_model),
+                          jnp.float32)
+    kdispatch.reset_decisions()
+    y_pal = ssm_mod.ssm_train(cfgp, w, x)
+    _assert_kernel_used("mamba2_ssd")
+    y_ref = ssm_mod.ssm_train(cfg, w, x)
+    _close(y_pal, y_ref, "float32")
+
+
+def test_ssd_chunked_h0_falls_back():
+    """A carried initial state is outside the kernel contract."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, 64, 2, 16))
+    dt = jnp.abs(jax.random.normal(jax.random.PRNGKey(8), (1, 64, 2))) + 0.05
+    A = -jnp.ones((2,))
+    Bm = jax.random.normal(jax.random.PRNGKey(9), (1, 64, 1, 16))
+    Cm = jax.random.normal(jax.random.PRNGKey(10), (1, 64, 1, 16))
+    h0 = jnp.ones((1, 2, 16, 16), jnp.float32)
+    kdispatch.reset_decisions()
+    y_pal, h_pal = ssm_mod.ssd_chunked(x, dt, A, Bm, Cm, 32, h0,
+                                       use_pallas=True)
+    dec = kdispatch.last_decisions()["mamba2_ssd"]
+    assert not dec.use_kernel and "initial state" in dec.reason
+    y_ref, h_ref = ssm_mod.ssd_chunked(x, dt, A, Bm, Cm, 32, h0)
+    np.testing.assert_array_equal(np.asarray(y_pal), np.asarray(y_ref))
+    np.testing.assert_array_equal(np.asarray(h_pal), np.asarray(h_ref))
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped GEMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,dtype", [(32, "float32"), (32, "bfloat16")])
+def test_moe_apply_parity(S, dtype):
+    """Capacity C=20 and d_ff_expert=64 are both ragged vs the 128
+    quantum — the kernel path must pad, not raise or fall back."""
+    cfg = _cfg(family="moe", dtype=dtype,
+               moe=MoESpec(n_experts=4, top_k=2, d_ff_expert=64))
+    assert moe_mod.capacity(cfg, S) % 128 != 0      # genuinely ragged
+    cfg, cfgp = _pair(cfg)
+    w = moe_mod.init_moe(cfg, KEY)
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, S, cfg.d_model),
+                          jnp.float32).astype(x_dtype(cfg))
+    kdispatch.reset_decisions()
+    y_pal, aux_pal = moe_mod.moe_apply(cfgp, w, x)
+    _assert_kernel_used("moe_gmm")
+    y_ref, aux_ref = moe_mod.moe_apply(cfg, w, x)
+    _close(y_pal, y_ref, dtype)
+    np.testing.assert_allclose(float(aux_pal), float(aux_ref), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fallback contracts
+# ---------------------------------------------------------------------------
+
+def test_mla_falls_back_with_reason():
+    """MLA's v_head_dim != qk dim cannot map onto the flash kernel; the
+    flag must still be safe to set (identical output, logged reason)."""
+    cfg = _cfg(head_dim=0, mla=MLASpec(kv_lora_rank=32, q_lora_rank=0,
+                                       qk_nope_dim=16, qk_rope_dim=16,
+                                       v_head_dim=16))
+    cfg, cfgp = _pair(cfg)
+    w = attn.init_mla(cfg, KEY)
+    x = jax.random.normal(jax.random.PRNGKey(12), (2, 100, cfg.d_model),
+                          jnp.float32)
+    pos = jnp.arange(100)
+    kdispatch.reset_decisions()
+    y_pal = attn.mla_train(cfgp, w, x, pos)
+    dec = kdispatch.last_decisions()["flash_attention"]
+    assert not dec.use_kernel and "head dim" in dec.reason
+    y_ref = attn.mla_train(cfg, w, x, pos)
+    np.testing.assert_array_equal(np.asarray(y_pal), np.asarray(y_ref))
+
+
+def test_mesh_sharded_falls_back():
+    """Dispatch refuses the kernel path under a mesh (GSPMD cannot
+    partition a pallas_call)."""
+    dec = kdispatch.decide("flash_attention",
+                           {"B": 1, "S": 128, "T": 128, "H": 4, "KV": 2,
+                            "hd": 32}, sharded=True)
+    assert not dec.use_kernel
+    assert "mesh-sharded" in dec.reason
+
+
+def test_unplannable_shape_falls_back_with_planner_reason():
+    """A working set no tiling can fit must fall back, carrying the
+    planner's error text, not raise out of the model."""
+    from repro.arch import get_device
+    tiny = get_device("tpu_v5e").derive("tpu_pico_vmem", vmem_bytes=1 << 10)
+    dec = kdispatch.decide("mfma_gemm", {"M": 4096, "N": 4096, "K": 4096},
+                           device=tiny)
+    assert not dec.use_kernel
+    assert "working-set" in dec.reason
+
+
+def test_dispatch_records_are_per_kernel():
+    kdispatch.reset_decisions()
+    kdispatch.decide("mfma_gemm", {"M": 128, "N": 128, "K": 128})
+    kdispatch.fallback("moe_gmm", "test reason")
+    recs = kdispatch.last_decisions()
+    assert recs["mfma_gemm"].use_kernel
+    assert not recs["moe_gmm"].use_kernel
+    kdispatch.reset_decisions()
+    assert kdispatch.last_decisions() == {}

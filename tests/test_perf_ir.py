@@ -209,7 +209,7 @@ def test_cpu_upcast_bytes_counts_large_buffer_converts():
     txt = (f"ENTRY %e (p: bf16[{dims}]) -> f32[{dims}] {{\n"
            f"  %p = bf16[{dims}] parameter(0)\n"
            f"  ROOT %c = f32[{dims}] convert(%p)\n"
-           f"}}\n")
+           "}\n")
     assert hlo_ir.cpu_upcast_bytes(txt) == 8388608 * 4 * 4
     # inside a fused computation: not a hoisted legalisation buffer
     fused = txt.replace("ENTRY %e", "%fused_computation.1")

@@ -2,10 +2,9 @@
 uses a (1,1) mesh for plumbing and pure-function checks for the guard)."""
 
 import jax
-import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.parallel.api import (DEFAULT_RULES, AxisSpec, logical_to_spec,
+from repro.parallel.api import (AxisSpec, logical_to_spec,
                                 set_mesh, shard, current_mesh)
 
 
