@@ -1,0 +1,218 @@
+"""Trace-replay serve benchmark: continuous batching vs the synchronous
+bucket engine on a ragged (arrival x prompt-length x output-length) mix.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--small]
+        [--out BENCH_serve.json] [--check-against BENCH_serve.json]
+        [--threshold 0.25] [--min-speedup 1.5]
+
+Both engines serve the SAME request trace on the same reduced model
+config.  The synchronous baseline does what ``ServeEngine`` can do:
+FIFO batches of ``max_batch``, every prompt right-padded to the batch
+max, every request decoded for the batch-max step count — the padding
+and convoy waste continuous batching exists to remove.  The continuous
+engine slot-fills the ragged trace through one compiled decode step
+over the block-paged KV cache.
+
+Both replays are timed warm (the trace runs once to populate jit
+caches, then the timed pass) so the number is steady-state serving
+throughput, not compile time.  Reported per engine: tokens/s over
+*requested* tokens, p50/p99 per-token latency, and (continuous only)
+cache-block occupancy.  ``--check-against`` applies the same
+speed-normalised >threshold regression gate as ``perf_smoke.py``;
+``--min-speedup`` additionally fails the run if continuous batching
+stops beating the synchronous baseline by the given factor.
+"""
+
+import argparse
+import json
+import math
+import platform
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+MAX_LEN = 128
+MAX_BATCH = 8
+
+
+def make_trace(n_requests, vocab, seed=0):
+    """Ragged request mix: mostly short chat turns, a heavy tail of long
+    generations, Poisson-ish arrivals in scheduler ticks."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    tick = 0
+    for i in range(n_requests):
+        tick += int(rng.poisson(1))
+        s = int(rng.integers(6, 72))
+        if rng.random() < 0.2:                     # long-tail generations
+            n = int(rng.integers(48, 96))
+        else:
+            n = int(rng.integers(4, 16))
+        n = min(n, MAX_LEN - s)
+        prompt = rng.integers(0, vocab, (s,)).astype(np.int32)
+        reqs.append((prompt, n, tick))
+    return reqs
+
+
+def run_continuous(cfg, params, trace):
+    from repro.serve import PagedServeEngine, Request
+
+    eng = PagedServeEngine(cfg, params, max_len=MAX_LEN,
+                           max_batch=MAX_BATCH)
+    reqs = [Request(prompt=p, n_steps=n, arrival=a) for p, n, a in trace]
+    eng.run(reqs)                                  # warm the jit caches
+    t0 = time.perf_counter()
+    results, stats = eng.run(reqs)
+    wall = time.perf_counter() - t0
+    tokens = stats["tokens"]
+    # per-token latency: gap to the previous emission of the same
+    # request (first token: gap from replay start)
+    lats = []
+    for r in results:
+        prev = t0
+        for t in r.emit_times:
+            lats.append(t - prev)
+            prev = t
+    lats = np.asarray(sorted(lats))
+    return {
+        "wall_s": round(wall, 4),
+        "tokens": tokens,
+        "tokens_per_s": round(tokens / wall, 2),
+        "p50_token_ms": round(float(np.percentile(lats, 50)) * 1e3, 3),
+        "p99_token_ms": round(float(np.percentile(lats, 99)) * 1e3, 3),
+        "occupancy_mean": round(stats["occupancy_mean"], 4),
+        "occupancy_max": round(stats["occupancy_max"], 4),
+        "decode_steps": stats["decode_steps"],
+    }
+
+
+def run_sync(cfg, params, trace):
+    from repro.serve import ServeEngine
+
+    batches = [trace[i:i + MAX_BATCH]
+               for i in range(0, len(trace), MAX_BATCH)]
+    # bucketed serving must hold padded-prompt + batch-max decode for its
+    # worst batch — the padding waste the paged cache removes
+    ml = max(max(len(p) for p, _, _ in b) + max(n for _, n, _ in b)
+             for b in batches)
+    eng = ServeEngine(cfg, params, max_len=32 * math.ceil(ml / 32))
+
+    def replay(record):
+        lats = []
+        t0 = time.perf_counter()
+        for batch in batches:
+            s_max = max(len(p) for p, _, _ in batch)
+            n_max = max(n for _, n, _ in batch)
+            padded = np.stack([np.pad(p, (0, s_max - len(p)))
+                               for p, _, _ in batch])
+            eng.generate(padded, n_steps=n_max, temperature=0.0)
+            if record:
+                # every token of the batch completes at batch end: each
+                # requested token's latency is its share of the batch wall
+                done = time.perf_counter()
+                requested = sum(n for _, n, _ in batch)
+                lats += [(done - t0) / max(1, requested)] * requested
+                t0 = done
+        return lats
+
+    replay(record=False)                           # warm the jit caches
+    t0 = time.perf_counter()
+    lats = replay(record=True)
+    wall = time.perf_counter() - t0
+    tokens = sum(n for _, n, _ in trace)           # requested tokens only
+    lats = np.asarray(sorted(lats))
+    return {
+        "wall_s": round(wall, 4),
+        "tokens": tokens,
+        "tokens_per_s": round(tokens / wall, 2),
+        "p50_token_ms": round(float(np.percentile(lats, 50)) * 1e3, 3),
+        "p99_token_ms": round(float(np.percentile(lats, 99)) * 1e3, 3),
+        "batches": len(batches),
+        "decode_steps": sum(max(n for _, n, _ in b) for b in batches),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--small", action="store_true",
+                    help="CI-sized trace (fewer requests)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check-against", default=None, metavar="BASELINE",
+                    help="fail on >threshold us_per_token regression vs "
+                         "this baseline JSON (speed-normalised)")
+    ap.add_argument("--threshold", type=float, default=0.25)
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="fail unless continuous tokens/s >= this factor "
+                         "of the synchronous baseline")
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import get_config
+    from repro.models import init_params
+
+    cfg = get_config("qwen2-7b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_requests = args.requests or (16 if args.small else 48)
+    trace = make_trace(n_requests, cfg.vocab_size, seed=args.seed)
+
+    sync = run_sync(cfg, params, trace)
+    cont = run_continuous(cfg, params, trace)
+    speedup = round(cont["tokens_per_s"] / sync["tokens_per_s"], 3)
+    cont["speedup_vs_sync"] = speedup
+
+    rows = []
+    for name, r in (("sync", sync), ("continuous", cont)):
+        us = 1e6 * r["wall_s"] / r["tokens"]
+        rows.append({"name": f"{name}_us_per_token",
+                     "us_per_call": round(us, 3), "derived": r})
+    payload = {
+        "schema": "bench_serve/v1",
+        "python": platform.python_version(),
+        "config": {"arch": cfg.name, "max_len": MAX_LEN,
+                   "max_batch": MAX_BATCH, "requests": n_requests,
+                   "small": args.small, "seed": args.seed},
+        "results": {"serve": rows},
+    }
+    Path(args.out).write_text(json.dumps(payload, indent=1))
+    print(f"[serve_bench] {n_requests} requests, "
+          f"{sync['tokens']} tokens -> {args.out}")
+    print(f"[serve_bench] sync       : {sync['tokens_per_s']:8.1f} tok/s  "
+          f"p50 {sync['p50_token_ms']:.2f}ms  p99 {sync['p99_token_ms']:.2f}ms"
+          f"  ({sync['decode_steps']} decode steps)")
+    print(f"[serve_bench] continuous : {cont['tokens_per_s']:8.1f} tok/s  "
+          f"p50 {cont['p50_token_ms']:.2f}ms  p99 {cont['p99_token_ms']:.2f}ms"
+          f"  ({cont['decode_steps']} decode steps, "
+          f"occupancy {cont['occupancy_mean']:.0%})")
+    print(f"[serve_bench] speedup    : {speedup:.2f}x")
+
+    rc = 0
+    if args.min_speedup is not None and speedup < args.min_speedup:
+        print(f"[serve_bench] FAIL: speedup {speedup:.2f}x < required "
+              f"{args.min_speedup:.2f}x")
+        rc = 1
+    if args.check_against:
+        from benchmarks.perf_smoke import check_against
+        baseline = json.loads(Path(args.check_against).read_text())
+        regressions, speed = check_against(payload, baseline,
+                                           args.threshold)
+        if regressions:
+            for (bench, name), base, new in regressions:
+                print(f"[serve_bench] REGRESSION {bench}/{name}: "
+                      f"{base:.3f}us -> {new:.3f}us "
+                      f"({new / base:.2f}x vs machine factor {speed:.2f}x)")
+            rc = 1
+        else:
+            print(f"[serve_bench] trend guard OK "
+                  f"(machine factor {speed:.2f}x vs {args.check_against})")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

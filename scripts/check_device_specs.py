@@ -13,7 +13,11 @@ Checks, per device:
   * no s_set_gpr_idx-mode instruction carries a timing entry (the timing
     model cannot execute them, paper Section VI);
   * bandwidths/links are non-negative, and an advertised peak (if any)
-    stays within 4x of the spec-derived peak.
+    stays within 4x of the spec-derived peak;
+  * serveability: the device's VMEM budget admits at least one valid
+    ``paged_decode_attention`` tile plan for a production GQA geometry —
+    the block-paged KV cache sizes its pool pages from exactly this
+    plan, so a device that cannot plan it cannot serve.
 
 Exit code 0 = catalog clean; 1 = violations (printed one per line).
 
@@ -30,6 +34,12 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 from repro.arch import HLO_DTYPE_TO_IN, get_device, list_devices  # noqa: E402
 from repro.arch.registry import MI200_CYCLES, MI300_CYCLES  # noqa: E402
 from repro.core import isa  # noqa: E402
+from repro.kernels.plan import plan_for  # noqa: E402  (JAX-free module)
+
+# The serve layer's page-size probe geometry: a dense production GQA
+# head layout (32 query / 8 KV heads of 128) over a 512-token probe —
+# the same call `repro.serve.paged_cache.default_page_size` makes.
+_PAGED_PROBE = {"B": 1, "T": 512, "H": 32, "KV": 8, "hd": 128}
 
 # The hardware-measured ground truth (paper Tables II-V): only these
 # (device, instr) pairs may carry validated=True.
@@ -124,6 +134,22 @@ def check_spec(name: str) -> list:
         if not (derived / 4 <= spec.peak_flops <= derived * 4):
             err(f"advertised peak {spec.peak_flops:.3g} FLOP/s is >4x off "
                 f"the spec-derived {derived:.3g}")
+
+    # Serveability: the paged-decode planner must find a page size within
+    # this device's VMEM budget, or PagedKVCache (and the whole
+    # continuous-batching engine) cannot be constructed for it.
+    for dt in ("bfloat16", "float32"):
+        try:
+            plan = plan_for("paged_decode_attention", _PAGED_PROBE,
+                            dtype=dt, device=name)
+        except Exception as e:  # noqa: BLE001 - any failure is a catalog bug
+            err(f"no valid paged-decode plan for {dt} "
+                f"(serve-layer page probe): {e}")
+            continue
+        page = plan.blocks.get("block_kv", 0)
+        if page < 1 or _PAGED_PROBE["T"] % page:
+            err(f"paged-decode plan for {dt} picked page {page}, which "
+                f"does not tile the T={_PAGED_PROBE['T']} probe")
     return errs
 
 

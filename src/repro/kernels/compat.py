@@ -34,6 +34,7 @@ __all__ = [
     "tpu_compiler_params",
     "vmem",
     "smem_block_spec",
+    "prefetch_grid_spec",
     "default_interpret",
     "resolve_interpret",
 ]
@@ -80,6 +81,24 @@ def smem_block_spec(block_shape: Optional[Tuple[int, ...]] = None,
     if block_shape is None and index_map is None:
         return pl.BlockSpec(memory_space=pltpu.SMEM)
     return pl.BlockSpec(block_shape, index_map, memory_space=pltpu.SMEM)
+
+
+def prefetch_grid_spec(*, num_scalar_prefetch: int, grid, in_specs,
+                       out_specs, scratch_shapes=()):
+    """A grid spec whose first ``num_scalar_prefetch`` operands are SMEM
+    scalars available *before* the kernel body runs — index maps receive
+    them as trailing refs, so block indices can be data-dependent (the
+    paged-attention block-table gather).  Raises :class:`PallasCompatError`
+    if the installed JAX predates scalar prefetch."""
+    cls = getattr(pltpu, "PrefetchScalarGridSpec", None)
+    if cls is None:
+        raise PallasCompatError(
+            f"jax {jax.__version__}: jax.experimental.pallas.tpu has no "
+            "PrefetchScalarGridSpec — repro.kernels needs jax>=0.4.30,<0.5 "
+            "(see requirements.txt) for the paged decode-attention kernel")
+    return cls(num_scalar_prefetch=num_scalar_prefetch, grid=tuple(grid),
+               in_specs=list(in_specs), out_specs=out_specs,
+               scratch_shapes=list(scratch_shapes))
 
 
 def default_interpret() -> bool:

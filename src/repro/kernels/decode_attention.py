@@ -1,11 +1,24 @@
-"""Flash-decode Pallas kernel: one query token vs a long KV cache.
+"""Flash-decode Pallas kernels: one query token vs a long KV cache.
 
-Grid (B*KV, T/block_kv): the KV sequence is the sequential dimension; the
-G query heads of each KV group ride along inside the tile ((G, hd) query
-block), so the kernel's inner product is an MXU-friendly (G, hd) x
-(hd, block_kv) matmul even for G as small as 4-8.  Running (m, l, acc)
-scratch identical to the prefill kernel; ``kv_len`` masks unwritten cache
-slots.
+Two variants share one kernel body:
+
+* :func:`decode_attention` — the contiguous cache.  Grid (B*KV,
+  T/block_kv): the KV sequence is the sequential dimension; the G query
+  heads of each KV group ride along inside the tile ((G, hd) query
+  block), so the kernel's inner product is an MXU-friendly (G, hd) x
+  (hd, block_kv) matmul even for G as small as 4-8.  Running (m, l, acc)
+  scratch identical to the prefill kernel; ``kv_len`` — a scalar or a
+  per-request (B,) vector — masks unwritten cache slots.
+
+* :func:`paged_decode_attention` — the block-paged cache the
+  continuous-batching serve engine uses.  K/V live in a shared pool of
+  fixed-size blocks ``(P, block_kv, KV, hd)``; each request names its
+  blocks via a ``(B, NB)`` block table.  The table and the per-request
+  lengths ride in as scalar-prefetch operands
+  (``compat.prefetch_grid_spec``), so the K/V BlockSpec index maps
+  gather ``pool[table[b, j]]`` per grid step — the same ``kv_len`` mask
+  machinery handles the partial last block, and fully-masked blocks are
+  skipped by ``pl.when`` exactly like the contiguous variant.
 """
 
 from __future__ import annotations
@@ -20,22 +33,23 @@ from jax.experimental import pallas as pl
 from repro.kernels import compat
 from repro.kernels.plan import validate_tiling
 
-__all__ = ["decode_attention"]
+__all__ = ["decode_attention", "paged_decode_attention"]
 
 _NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-                   acc_ref, *, scale: float, n_kv: int, block_kv: int):
-    ki = pl.program_id(1)
+def _decode_body(kv_len, ki, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                 acc_ref, *, scale: float, n_kv: int, block_kv: int):
+    """Shared online-softmax step: one (G, block_kv) score tile against the
+    running (m, l, acc) scratch.  ``kv_len`` masks columns past the
+    request's written prefix (the partial last block and, for the paged
+    variant, the whole tail of over-allocated table slots)."""
 
     @pl.when(ki == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    kv_len = len_ref[0]
 
     @pl.when(ki * block_kv < kv_len)
     def _compute():
@@ -61,15 +75,37 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
                     ).astype(o_ref.dtype)
 
 
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, n_kv: int, block_kv: int,
+                   kv_heads: int):
+    kv_len = len_ref[pl.program_id(0) // kv_heads]      # per-request length
+    _decode_body(kv_len, pl.program_id(1), q_ref, k_ref, v_ref, o_ref,
+                 m_ref, l_ref, acc_ref, scale=scale, n_kv=n_kv,
+                 block_kv=block_kv)
+
+
+def _lens_vector(kv_len, B: int) -> jax.Array:
+    """Normalise ``kv_len`` to a (B,) int32 vector (scalars broadcast)."""
+    kl = jnp.asarray(kv_len, jnp.int32)
+    if kl.ndim == 0:
+        return jnp.broadcast_to(kl[None], (B,))
+    if kl.shape != (B,):
+        raise ValueError(
+            f"decode_attention: kv_len must be a scalar or a per-request "
+            f"({B},) vector, got shape {kl.shape}")
+    return kl
+
+
 @functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      kv_len: jax.Array, *, block_kv: int,
                      interpret: bool = False) -> jax.Array:
-    """q: (B, H, hd); k/v: (B, T, KV, hd); kv_len: scalar int32.
+    """q: (B, H, hd); k/v: (B, T, KV, hd); kv_len: int32 scalar or (B,).
 
-    Returns (B, H, hd) attention output over cache positions < kv_len.
-    ``block_kv`` must be an MXU-aligned divisor of the cache length T
-    (derive it with ``repro.kernels.plan.plan_for``).
+    Returns (B, H, hd) attention output over cache positions < kv_len —
+    per request when ``kv_len`` is a (B,) vector, so mixed-length batches
+    mask correctly.  ``block_kv`` must be an MXU-aligned divisor of the
+    cache length T (derive it with ``repro.kernels.plan.plan_for``).
     """
     B, H, hd = q.shape
     T, KV = k.shape[1], k.shape[2]
@@ -81,12 +117,12 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     qf = q.reshape(B, KV, G, hd).reshape(B * KV, G, hd)
     kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
     vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
-    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32)[None], (1,))
+    lens = _lens_vector(kv_len, B)
 
     grid = (B * KV, T // block_kv)
     out = pl.pallas_call(
         functools.partial(_decode_kernel, scale=scale, n_kv=T // block_kv,
-                          block_kv=block_kv),
+                          block_kv=block_kv, kv_heads=KV),
         grid=grid,
         in_specs=[
             compat.smem_block_spec(),
@@ -105,4 +141,85 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(lens, qf, kf, vf)
+    return out.reshape(B, KV, G, hd).reshape(B, H, hd)
+
+
+def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale: float, n_kv: int,
+                         block_kv: int, kv_heads: int):
+    # tbl_ref/len_ref are the scalar-prefetch operands; the K/V gather
+    # already happened in the BlockSpec index maps below.
+    kv_len = len_ref[pl.program_id(0) // kv_heads]
+    _decode_body(kv_len, pl.program_id(1), q_ref, k_ref, v_ref, o_ref,
+                 m_ref, l_ref, acc_ref, scale=scale, n_kv=n_kv,
+                 block_kv=block_kv)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           kv_len: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k_pool/v_pool: (P, block_kv, KV, hd);
+    block_tables: (B, NB) int32 physical block ids; kv_len: (B,) int32.
+
+    Each request attends its first ``kv_len[b]`` cache positions, read
+    from pool blocks ``block_tables[b, 0..ceil(kv_len/block_kv))`` — the
+    page size IS the kv tile, so it must be MXU-aligned (the
+    ``paged_decode_attention`` planner chooses it).  Table slots past a
+    request's written prefix must hold valid (in-range) block ids — the
+    serve engine points them at its reserved null block — because the
+    gather runs before the ``pl.when`` mask skips the compute.
+    """
+    B, H, hd = q.shape
+    P, block_kv, KV = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    NB = block_tables.shape[1]
+    G = H // KV
+    T = NB * block_kv
+    scale = 1.0 / math.sqrt(hd)
+    validate_tiling("paged_decode_attention", {"T": (T, block_kv)},
+                    depth_dims=(), block_names={"T": "block_kv"})
+
+    qf = q.reshape(B, KV, G, hd).reshape(B * KV, G, hd)
+    tables = jnp.asarray(block_tables, jnp.int32)
+    lens = _lens_vector(kv_len, B)
+
+    def _kv_index(i, j, tbl_ref, len_ref):
+        # gather: grid step (i, j) reads physical block table[b, j] of
+        # kv head i % KV (block dims: (1, block_kv, 1, hd))
+        del len_ref
+        return (tbl_ref[i // KV, j], 0, i % KV, 0)
+
+    grid_spec = compat.prefetch_grid_spec(
+        num_scalar_prefetch=2,
+        grid=(B * KV, NB),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda i, j, t, n: (i, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd), _kv_index),
+            pl.BlockSpec((1, block_kv, 1, hd), _kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda i, j, t, n: (i, 0, 0)),
+        scratch_shapes=[
+            compat.vmem((G, 1), jnp.float32),
+            compat.vmem((G, 1), jnp.float32),
+            compat.vmem((G, hd), jnp.float32),
+        ],
+    )
+
+    def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                m_ref, l_ref, acc_ref):
+        _paged_decode_kernel(
+            tbl_ref, len_ref, q_ref,
+            k_ref.reshape(1, block_kv, hd), v_ref.reshape(1, block_kv, hd),
+            o_ref, m_ref, l_ref, acc_ref, scale=scale, n_kv=NB,
+            block_kv=block_kv, kv_heads=KV)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), q.dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, lens, qf, k_pool, v_pool)
     return out.reshape(B, KV, G, hd).reshape(B, H, hd)

@@ -34,8 +34,8 @@ from repro.kernels import (compat, decode_attention as _da,
                            mfma_gemm as _gemm, moe_gmm as _gmm)
 from repro.kernels.plan import TilePlan, plan_for
 
-__all__ = ["mfma_gemm", "flash_attention", "decode_attention", "mamba2_ssd",
-           "moe_gmm"]
+__all__ = ["mfma_gemm", "flash_attention", "decode_attention",
+           "paged_decode_attention", "mamba2_ssd", "moe_gmm"]
 
 
 def _resolve(kernel: str, plan: Optional[TilePlan],
@@ -139,6 +139,37 @@ def decode_attention(q, k, v, kv_len, *, device=None,
         v = _pad_axis(v, 1, Tp)
     return _da.decode_attention(q, k, v, kv_len, **blocks,
                                 interpret=compat.resolve_interpret(interpret))
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, kv_len, *,
+                           device=None, plan: Optional[TilePlan] = None,
+                           block_kv: Optional[int] = None,
+                           interpret: Optional[bool] = None):
+    """Flash-decode over a block-paged KV pool.
+
+    q (B, H, hd); k_pool/v_pool (P, page, KV, hd); block_tables (B, NB)
+    int32 physical block ids; kv_len (B,) int32 per-request lengths.
+    The pool's page size IS the kv tile, so the plan's ``block_kv`` must
+    equal it — the ``shapes["page"]`` pin makes the planner agree on
+    every device; there is no ``pad=`` mode (pool geometry is aligned by
+    construction via :class:`~repro.serve.PagedKVCache`).
+    """
+    B, H, hd = q.shape
+    page, KV = k_pool.shape[1], k_pool.shape[2]
+    NB = block_tables.shape[1]
+    plan, blocks = _resolve("paged_decode_attention", plan,
+                            {"B": B, "T": NB * page, "H": H, "KV": KV,
+                             "hd": hd, "page": page},
+                            q.dtype, device, dict(block_kv=block_kv), False)
+    if blocks["block_kv"] != page:
+        raise ValueError(
+            f"paged_decode_attention: plan tiles block_kv="
+            f"{blocks['block_kv']} but the KV pool's page size is {page}; "
+            "plan with shapes['page'] (or block_kv=) pinned to the pool's "
+            "page so the gather granularity matches")
+    return _da.paged_decode_attention(
+        q, k_pool, v_pool, block_tables, kv_len,
+        interpret=compat.resolve_interpret(interpret))
 
 
 def mamba2_ssd(x, dt, A, Bm, Cm, *, device=None,

@@ -389,6 +389,31 @@ def _plan_decode_attention(shapes, dtype, spec, overrides, pad):
         overrides=overrides, pad=pad)
 
 
+def _plan_paged_decode_attention(shapes, dtype, spec, overrides, pad):
+    """Same per-step geometry as ``decode_attention`` — one (G, block_kv)
+    score tile and (m, l, acc) scratch — but ``block_kv`` doubles as the
+    KV-pool page size.  An optional ``shapes["page"]`` pins ``block_kv``
+    to an existing pool's page so plans always match pool geometry on
+    every device; omit it (the :class:`~repro.serve.PagedKVCache`
+    constructor does) to let the planner choose the page size."""
+    B, T = shapes["B"], shapes["T"]
+    H, KV, hd = shapes["H"], shapes["KV"], shapes["hd"]
+    G = H // KV
+    page = shapes.get("page")
+    if page is not None and overrides.get("block_kv") is None:
+        overrides = dict(overrides, block_kv=int(page))
+    return _plan(
+        "paged_decode_attention", spec, dtype,
+        dims=(_Dim("block_kv", "T", T),),
+        caps={"block_kv": 512},
+        # q/o tiles + one K and one V page + f32 (m, l, acc) scratch.
+        footprint=lambda b, dsz: (2 * G * hd * dsz
+                                  + 2 * b["block_kv"] * hd * dsz
+                                  + G * (hd + 2) * 4),
+        grid=lambda s, b: (B * KV, s["T"] // b["block_kv"]),
+        overrides=overrides, pad=pad)
+
+
 def _plan_mamba2_ssd(shapes, dtype, spec, overrides, pad):
     B, S, nh = shapes["B"], shapes["S"], shapes["nh"]
     hd, ds = shapes["hd"], shapes["ds"]
@@ -525,6 +550,13 @@ for _entry in (
         planner=_plan_decode_attention,
         block_names=("block_kv",),
         doc="flash-decode: one query token vs a long KV cache"),
+    KernelEntry(
+        name="paged_decode_attention",
+        op="repro.kernels.ops:paged_decode_attention",
+        ref="repro.kernels.ref:paged_decode_attention_ref",
+        planner=_plan_paged_decode_attention,
+        block_names=("block_kv",),
+        doc="flash-decode over a block-paged KV pool via a block table"),
     KernelEntry(
         name="mamba2_ssd", op="repro.kernels.ops:mamba2_ssd",
         ref="repro.kernels.ref:mamba2_ssd_ref", planner=_plan_mamba2_ssd,

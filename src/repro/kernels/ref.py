@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["mfma_gemm_ref", "flash_attention_ref", "decode_attention_ref",
-           "mamba2_ssd_ref", "moe_gmm_ref"]
+           "paged_decode_attention_ref", "mamba2_ssd_ref", "moe_gmm_ref"]
 
 
 def mfma_gemm_ref(a, b, c):
@@ -36,7 +36,10 @@ def _grouped_full_attn(q, k, v, *, causal, kv_len=None):
         j = jnp.arange(T)[None, :]
         s = jnp.where((j <= i)[None, None, None], s, -jnp.inf)
     if kv_len is not None:
-        s = jnp.where(jnp.arange(T)[None, None, None, None] < kv_len, s,
+        kl = jnp.asarray(kv_len)
+        if kl.ndim == 1:                      # per-request (B,) lengths
+            kl = kl[:, None, None, None, None]
+        s = jnp.where(jnp.arange(T)[None, None, None, None] < kl, s,
                       -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
@@ -49,9 +52,21 @@ def flash_attention_ref(q, k, v, *, causal=True):
 
 
 def decode_attention_ref(q, k, v, kv_len):
-    """q (B, H, hd) single-token attention vs cache prefix < kv_len."""
+    """q (B, H, hd) single-token attention vs cache prefix < kv_len
+    (an int32 scalar, or a per-request (B,) vector)."""
     o = _grouped_full_attn(q[:, None], k, v, causal=False, kv_len=kv_len)
     return o[:, 0]
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, kv_len):
+    """Oracle for the paged kernel: gather each request's blocks from the
+    (P, bs, KV, hd) pool into a dense (B, NB*bs, KV, hd) cache, then run
+    the plain decode oracle with per-request lengths."""
+    B = q.shape[0]
+    bs, KV, hd = k_pool.shape[1], k_pool.shape[2], k_pool.shape[3]
+    k = k_pool[block_tables].reshape(B, -1, KV, hd)
+    v = v_pool[block_tables].reshape(B, -1, KV, hd)
+    return decode_attention_ref(q, k, v, kv_len)
 
 
 def mamba2_ssd_ref(x, dt, A, Bm, Cm):

@@ -45,9 +45,10 @@ from repro.models.config import ModelConfig
 from repro.models.layers import cdtype, dense, mm, norm_apply, rope
 from repro.parallel.api import current_mesh, shard
 
-__all__ = ["init_attn", "attn_train", "attn_decode", "init_mla", "mla_train",
-           "mla_decode", "init_cross", "cross_train", "cross_decode",
-           "init_attn_cache", "init_mla_cache", "sdpa", "attention"]
+__all__ = ["init_attn", "attn_train", "attn_decode", "attn_decode_paged",
+           "init_mla", "mla_train", "mla_decode", "init_cross", "cross_train",
+           "cross_decode", "init_attn_cache", "init_mla_cache", "sdpa",
+           "attention"]
 
 _FLASH_BLOCK = 512
 _FLASH_MIN_T = 2048     # plain sdpa below this KV length
@@ -75,10 +76,18 @@ def _shard_kv(k: jax.Array) -> jax.Array:
     return shard(k, "batch", None, None, None)
 
 
+def _kv_len_bc(kv_len) -> jax.Array:
+    """Normalise ``kv_len`` for (B, H, S, T) logits masks: a scalar
+    broadcasts as-is; a per-request (B,) vector gains (1, 1, 1) tails."""
+    kl = jnp.asarray(kv_len, jnp.int32)
+    return kl[:, None, None, None] if kl.ndim == 1 else kl
+
+
 def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
          scale: float, kv_len: Optional[jax.Array] = None,
          q_offset: int = 0) -> jax.Array:
-    """Plain SDPA over full heads.  q: (B,S,H,hd); k/v: (B,T,H,hd)."""
+    """Plain SDPA over full heads.  q: (B,S,H,hd); k/v: (B,T,H,hd).
+    ``kv_len`` is an int32 scalar or a per-request (B,) vector."""
     B, S, H, hd = q.shape
     T = k.shape[1]
     logits = mm("bshd,bthd->bhst", q, k) * scale
@@ -88,7 +97,7 @@ def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
         logits = jnp.where((j <= i)[None, None], logits, _NEG_INF)
     if kv_len is not None:
         t = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, T), 3)
-        logits = jnp.where(t < kv_len, logits, _NEG_INF)
+        logits = jnp.where(t < _kv_len_bc(kv_len), logits, _NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     return mm("bhst,bthd->bshd", probs, v, out_dtype=q.dtype)
 
@@ -114,6 +123,8 @@ def _flash_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         kv_len = jnp.asarray(T, jnp.int32) if kv_len is None else kv_len
         T = T + pad
+    if kv_len is not None:
+        kv_len = _kv_len_bc(kv_len)        # (B,) vectors mask per request
     nb = T // block
     qf = (q.astype(jnp.float32) * scale)
 
@@ -337,6 +348,68 @@ def attn_decode(cfg: ModelConfig, w, x: jax.Array, cache: Dict,
     out = attention(q, k, v, causal=False, kv_len=pos + 1,
                     use_pallas=cfg.use_pallas,
                     pallas_device=cfg.pallas_device)
+    y = dense(out.reshape(B, S, cfg.n_heads * cfg.hd), w["wo"])
+    return y, {"k": k, "v": v}
+
+
+def _paged_attention_kernel(q, k_pool, v_pool, tables, kv_len, *,
+                            device=None):
+    """Try the paged Pallas kernel; ``None`` means "gather + reference"."""
+    B, S, H, hd = q.shape
+    page, KV = k_pool.shape[1], k_pool.shape[2]
+    NB = tables.shape[1]
+    dec = kdispatch.decide(
+        "paged_decode_attention",
+        {"B": B, "T": NB * page, "H": H, "KV": KV, "hd": hd, "page": page},
+        dtype=q.dtype, device=device, sharded=current_mesh() is not None)
+    if not dec.use_kernel:
+        return None
+    return kops.paged_decode_attention(q[:, 0], k_pool, v_pool, tables,
+                                       kv_len, plan=dec.plan)[:, None]
+
+
+def attn_decode_paged(cfg: ModelConfig, w, x: jax.Array, cache: Dict,
+                      block_tables: jax.Array,
+                      lens: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One continuous-batching decode step against the shared KV pool.
+
+    x: (B, 1, D) — each row is a *different* request's pending token;
+    cache ``{"k", "v"}``: (P, page, KV, hd) block pools; block_tables:
+    (B, NB) int32 physical block ids (unused tail slots must point at the
+    engine's reserved null block 0); lens: (B,) int32 tokens already in
+    each request's cache — both the new token's write position and its
+    RoPE position.  Unlike :func:`attn_decode` there is no per-batch
+    ``pos`` scalar: every request sits at its own offset.
+    """
+    B, S, D = x.shape
+    lens = jnp.asarray(lens, jnp.int32)
+    q, k_new, v_new = _qkv(cfg, w, x, lens[:, None])
+    P, page, KV, hd = cache["k"].shape
+    tables = jnp.asarray(block_tables, jnp.int32)
+    # scatter the new K/V row into pool block table[b, lens//page] at
+    # row lens%page — requests own disjoint blocks, so rows never collide
+    # (idle engine slots all hit the null block, whose content is never
+    # attended unmasked)
+    slot = jnp.take_along_axis(tables, (lens // page)[:, None], axis=1)[:, 0]
+    idx = slot * page + lens % page
+    k = cache["k"].reshape(P * page, KV, hd).at[idx].set(
+        k_new[:, 0]).reshape(P, page, KV, hd)
+    v = cache["v"].reshape(P * page, KV, hd).at[idx].set(
+        v_new[:, 0]).reshape(P, page, KV, hd)
+    kv_len = lens + 1
+    out = None
+    if cfg.use_pallas:
+        out = _paged_attention_kernel(q, k, v, tables, kv_len,
+                                      device=cfg.pallas_device)
+    if out is None:
+        # gather the tables into a dense (B, NB*page, KV, hd) cache and
+        # run the plain decode path (which may still pick the contiguous
+        # kernel when cfg.use_pallas is set)
+        kd = k[tables].reshape(B, -1, KV, hd)
+        vd = v[tables].reshape(B, -1, KV, hd)
+        out = attention(q, kd, vd, causal=False, kv_len=kv_len,
+                        use_pallas=cfg.use_pallas,
+                        pallas_device=cfg.pallas_device)
     y = dense(out.reshape(B, S, cfg.n_heads * cfg.hd), w["wo"])
     return y, {"k": k, "v": v}
 

@@ -35,7 +35,7 @@ from repro.models.layers import cdtype, mlp_apply, norm_apply
 from repro.models.moe import init_moe, moe_apply
 
 __all__ = ["Sig", "layer_sigs", "schedule", "init_layer", "init_layer_cache",
-           "apply_layer", "init_norm", "init_mlp"]
+           "apply_layer", "apply_layer_paged", "init_norm", "init_mlp"]
 
 Sig = Tuple[str, bool]
 
@@ -232,6 +232,36 @@ def apply_layer(cfg: ModelConfig, sig: Sig, w, h: jax.Array, *,
         return h, aux
     if mode == "prefill":
         return h, aux, new_cache
+    return h, new_cache
+
+
+def apply_layer_paged(cfg: ModelConfig, sig: Sig, w, h: jax.Array,
+                      cache: Dict, block_tables: jax.Array,
+                      lens: jax.Array):
+    """One layer of a continuous-batching decode tick: like
+    ``apply_layer(mode="decode")`` but against the shared block-paged KV
+    pool, with per-request positions (``lens``) instead of a batch-wide
+    ``pos`` scalar.  Returns (h, new_cache); h is (B, 1, D).
+
+    Only plain GQA attention layers can page — the SSM state is O(1) and
+    needs no paging, and MLA/cross caches have different leaf shapes —
+    so heterogeneous schedules raise rather than silently mixing cache
+    layouts (``PagedKVCache`` rejects such configs up front).
+    """
+    mixer, _ = sig
+    if mixer != "attn" or cfg.mla:
+        raise NotImplementedError(
+            f"apply_layer_paged: only plain GQA attention layers page "
+            f"(got mixer={mixer!r}, mla={bool(cfg.mla)})")
+    hin = h
+    x = norm_apply(cfg, w["ln1"], h)
+    y, new_cache = attn.attn_decode_paged(cfg, w["mixer"], x, cache,
+                                          block_tables, lens)
+    h = hin + y
+    if "ffn" in w:
+        z = norm_apply(cfg, w["ln2"], h)
+        f, _ = _ffn(cfg, sig, w, z)
+        h = h + f
     return h, new_cache
 
 

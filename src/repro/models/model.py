@@ -22,15 +22,16 @@ from typing import Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.blocks import (Sig, apply_layer, init_layer,
-                                 init_layer_cache, init_norm, layer_sigs,
-                                 schedule)
+from repro.models.blocks import (Sig, apply_layer, apply_layer_paged,
+                                 init_layer, init_layer_cache, init_norm,
+                                 layer_sigs, schedule)
 from repro.models.config import ModelConfig
 from repro.models.layers import cdtype, embed_apply, norm_apply, unembed_apply
 from repro.parallel.api import shard
 
 __all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step",
-           "prefill", "param_logical_axes", "LEARNED_POS_LEN"]
+           "paged_decode_step", "prefill", "param_logical_axes",
+           "LEARNED_POS_LEN"]
 
 LEARNED_POS_LEN = 32768  # learned-pos table length (whisper decode_32k)
 
@@ -170,10 +171,15 @@ def _logits_out(cfg: ModelConfig, params, h):
 
 
 def forward(cfg: ModelConfig, params, batch: Dict, *, mode: str = "train",
-            max_len: int = 0, with_hidden: bool = False):
+            max_len: int = 0, with_hidden: bool = False, last_pos=None):
     """Returns (logits, aux) for train; (logits, aux, cache) for prefill.
     ``with_hidden`` additionally returns the final-normed hidden states
-    (used by the memory-lean CE loss)."""
+    (used by the memory-lean CE loss).  ``last_pos`` (prefill only)
+    names the true last prompt position(s) — an int32 scalar or a
+    per-request (B,) vector — so right-padded prompts (the paged serve
+    engine pads to page multiples) slice their logits at the real last
+    token instead of the padding; causal attention makes the padded
+    positions inert for every earlier row."""
     tokens = batch["tokens"]
     B, S = tokens.shape
     first_k, period, n_periods = schedule(cfg)
@@ -214,7 +220,15 @@ def forward(cfg: ModelConfig, params, batch: Dict, *, mode: str = "train",
         (h, aux), layer_caches = jax.lax.scan(body, (h, aux), params["layers"])
         # serving only needs the last position's logits — slice BEFORE the
         # unembed matmul so the (B, S, V) tensor is never formed
-        logits = _logits_out(cfg, params, h[:, -1:])
+        if last_pos is None:
+            h_last = h[:, -1:]
+        else:
+            lp = jnp.asarray(last_pos, jnp.int32)
+            if lp.ndim == 0:
+                h_last = jax.lax.dynamic_slice_in_dim(h, lp, 1, 1)
+            else:
+                h_last = jnp.take_along_axis(h, lp[:, None, None], axis=1)
+        logits = _logits_out(cfg, params, h_last)
         cache = {"layers0": caches0, "layers": layer_caches}
         return logits, aux, cache
 
@@ -379,9 +393,56 @@ def decode_step(cfg: ModelConfig, params, cache: Dict, tokens: jax.Array,
     return logits, {"layers0": new0, "layers": new_layers}
 
 
-def prefill(cfg: ModelConfig, params, batch: Dict,
-            max_len: int) -> Tuple[jax.Array, Dict]:
-    """Process a prompt, returning (last-position logits, filled cache)."""
+def prefill(cfg: ModelConfig, params, batch: Dict, max_len: int,
+            last_pos=None) -> Tuple[jax.Array, Dict]:
+    """Process a prompt, returning (last-position logits, filled cache).
+    ``last_pos`` slices right-padded prompts at their true last token
+    (see :func:`forward`)."""
     logits, _, cache = forward(cfg, params, batch, mode="prefill",
-                               max_len=max_len)
+                               max_len=max_len, last_pos=last_pos)
     return logits[:, -1:], cache
+
+
+def paged_decode_step(cfg: ModelConfig, params, cache: Dict,
+                      tokens: jax.Array, block_tables: jax.Array,
+                      lens: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One continuous-batching decode tick over the block-paged cache.
+
+    tokens (B, 1) int32 — each engine slot's pending token; block_tables
+    (B, NB) int32 logical->physical pool block maps (shared across
+    layers: every layer's pool is indexed by the same table); lens (B,)
+    int32 per-request cache lengths (write index AND RoPE position).
+    The cache pytree mirrors :func:`init_cache`'s structure but each
+    layer leaf is a (P, page, KV, hd) pool — build it with
+    ``repro.serve.PagedKVCache``.  Unlike :func:`decode_step` there is
+    no batch-wide ``pos``: slots decode at independent offsets, which is
+    what lets one compiled step serve ragged in-flight requests.
+    """
+    if cfg.pos_embed != "rope":
+        raise NotImplementedError(
+            f"paged_decode_step: per-request positions need rope "
+            f"(cfg.pos_embed={cfg.pos_embed!r})")
+    first_k, period, n_periods = schedule(cfg)
+    sigs = layer_sigs(cfg)
+    h = _embed_in(cfg, params, tokens)
+
+    new0: List = []
+    for i in range(first_k):
+        h, nc = apply_layer_paged(cfg, sigs[i], params["layers0"][i], h,
+                                  cache["layers0"][i], block_tables, lens)
+        new0.append(nc)
+
+    slot_sigs = [sigs[first_k + s] for s in range(period)]
+
+    def body(h, x):
+        ws, cs = x
+        new_cs = []
+        for s in range(period):
+            h, nc = apply_layer_paged(cfg, slot_sigs[s], ws[s], h, cs[s],
+                                      block_tables, lens)
+            new_cs.append(nc)
+        return h, tuple(new_cs)
+
+    h, new_layers = jax.lax.scan(body, h, (params["layers"], cache["layers"]))
+    logits = _logits_out(cfg, params, h)
+    return logits, {"layers0": new0, "layers": new_layers}

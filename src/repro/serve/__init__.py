@@ -1,3 +1,8 @@
-"""Serving layer: batched engine over prefill + decode steps."""
+"""Serving layer: synchronous batched engine (the parity oracle) and the
+continuous-batching engine over the block-paged KV cache."""
 
 from repro.serve.engine import ServeEngine, GenerateResult  # noqa: F401
+from repro.serve.paged_cache import (PagedKVCache,  # noqa: F401
+                                     default_page_size)
+from repro.serve.paged_engine import (PagedServeEngine,  # noqa: F401
+                                      Request, RequestResult)

@@ -59,9 +59,12 @@ class ServeEngine:
         if extras:
             batch.update(extras)
         logits, cache = self._prefill(self.params, batch)
-        key = jax.random.PRNGKey(seed)
+        # split BEFORE the first sample: the root key is only ever split,
+        # never consumed, so the first token's subkey is independent of
+        # the step subkeys derived from the same root
+        key, sub = jax.random.split(jax.random.PRNGKey(seed))
         out: List[np.ndarray] = []
-        tok = self._sample(logits[:, -1], key, temperature)[:, None]
+        tok = self._sample(logits[:, -1], sub, temperature)[:, None]
         for i in range(n_steps):
             out.append(np.asarray(tok))
             key, sub = jax.random.split(key)

@@ -1,0 +1,153 @@
+"""Block-paged KV cache: a shared pool of fixed-size KV blocks.
+
+Cache layout
+------------
+Every attention layer owns two pools ``k``/``v`` of shape
+``(P, page, KV, hd)``: ``P`` physical blocks of ``page`` token rows.  A
+request's cache is the *logical* concatenation of the blocks its row of
+the (B, NB) block table names — the table is shared across layers, so
+one allocation covers the whole model.  ``page`` is the MXU-aligned
+``block_kv`` the ``paged_decode_attention`` planner derives from the
+target :class:`~repro.arch.DeviceSpec` (the pool's gather granularity
+IS the kernel's kv tile), overridable for tests.
+
+Physical block 0 is the reserved **null block**: it is never allocated,
+idle engine slots point their whole table at it, and their masked
+scatter-writes land there harmlessly — so one compiled decode step can
+run over a fixed-size slot array with any subset active.
+
+The allocator is a host-side free list: :meth:`alloc` hands out blocks
+(``None`` when the pool cannot cover the request — the scheduler's
+admission signal), :meth:`free` returns a retired request's blocks
+immediately.  Device state is only the pool pytree itself
+(:attr:`pools`), shaped exactly like ``repro.models.init_cache`` so
+``paged_decode_step``'s scan consumes it directly.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.plan import plan_for
+from repro.models.blocks import layer_sigs, schedule
+from repro.models.config import ModelConfig
+from repro.models.layers import cdtype
+
+__all__ = ["PagedKVCache", "default_page_size"]
+
+#: T the page-size probe plans for: the planner cap, so the chosen page
+#: is the largest aligned block the device's VMEM budget admits.
+_PROBE_T = 512
+
+
+def default_page_size(cfg: ModelConfig, device=None, *,
+                      cap: Optional[int] = None) -> int:
+    """The page size the planner picks for ``cfg``'s heads on ``device``.
+
+    ``cap`` bounds the probe length (an engine passes its ``max_len``):
+    without it the planner returns its largest VMEM-admissible block,
+    and a pool paged coarser than the requests it serves makes every
+    decode tick gather and attend over rows that can never hold data.
+    """
+    probe_t = _PROBE_T if cap is None else min(_PROBE_T, max(1, cap))
+    plan = plan_for("paged_decode_attention",
+                    {"B": 1, "T": probe_t, "H": cfg.n_heads,
+                     "KV": cfg.n_kv_heads, "hd": cfg.hd},
+                    dtype=cfg.dtype, device=device)
+    return plan.blocks["block_kv"]
+
+
+class PagedKVCache:
+    """Pool pytree + free-list allocator for one model's KV blocks.
+
+    ``n_blocks`` counts physical blocks *including* the reserved null
+    block 0, so ``n_blocks - 1`` are allocatable.  ``page=None`` asks
+    the planner (:func:`default_page_size`); an explicit page is
+    validated against the same tiling contract (it must be MXU-aligned,
+    or the paged kernel could never run on it).
+    """
+
+    def __init__(self, cfg: ModelConfig, *, n_blocks: int,
+                 page: Optional[int] = None, device=None):
+        if n_blocks < 2:
+            raise ValueError(f"n_blocks={n_blocks}: need at least the null "
+                             "block plus one allocatable block")
+        sigs = layer_sigs(cfg)
+        bad = [f"layer {i}: {s[0]}" for i, s in enumerate(sigs)
+               if s[0] != "attn"]
+        if cfg.mla:
+            bad.append("mla latent cache")
+        if bad:
+            raise NotImplementedError(
+                "PagedKVCache: only plain GQA attention layers page "
+                f"(config {cfg.name!r} has {', '.join(bad)})")
+        if page is None:
+            page = default_page_size(cfg, device)
+        else:
+            # pinning block_kv re-runs the tiling contract: a misaligned
+            # page raises here, not inside the first decode step
+            plan_for("paged_decode_attention",
+                     {"B": 1, "T": page, "H": cfg.n_heads,
+                      "KV": cfg.n_kv_heads, "hd": cfg.hd, "page": page},
+                     dtype=cfg.dtype, device=device)
+        self.cfg = cfg
+        self.page = int(page)
+        self.n_blocks = int(n_blocks)
+        self.pools = self._init_pools(cfg)
+        self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
+
+    def _init_pools(self, cfg: ModelConfig) -> Dict:
+        dt = cdtype(cfg)
+        shp = (self.n_blocks, self.page, cfg.n_kv_heads, cfg.hd)
+        first_k, period, n_periods = schedule(cfg)
+
+        def pool():
+            return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+
+        return {
+            "layers0": [pool() for _ in range(first_k)],
+            "layers": tuple(
+                jax.tree.map(lambda a: jnp.zeros((n_periods,) + a.shape,
+                                                 a.dtype), pool())
+                for _ in range(period)),
+        }
+
+    # -- allocator ---------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (the null block excluded)."""
+        return self.n_blocks - 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.capacity - len(self._free)
+
+    def occupancy(self) -> float:
+        """Fraction of allocatable blocks currently held by requests."""
+        return self.used_blocks / max(1, self.capacity)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Claim ``n`` blocks, or ``None`` if the pool cannot cover them
+        (the all-or-nothing contract keeps admission atomic)."""
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        return ids
+
+    def free(self, ids: Sequence[int]) -> None:
+        """Return a retired request's blocks to the free list."""
+        for b in ids:
+            if not 1 <= b < self.n_blocks:
+                raise ValueError(f"free: block id {b} outside the "
+                                 f"allocatable range [1, {self.n_blocks})")
+            if b in self._free:
+                raise ValueError(f"free: block {b} double-freed")
+        self._free.extend(ids)

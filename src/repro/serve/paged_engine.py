@@ -1,0 +1,350 @@
+"""Continuous-batching serve engine over the block-paged KV cache.
+
+Scheduler states (per request)::
+
+    PENDING --admit--> ACTIVE --retire--> DONE
+      (waits for a slot  (holds a slot +     (blocks back on the
+       + enough blocks)   reserved blocks)    free list immediately)
+
+Each scheduler *tick*:
+
+1. **retire** — requests that emitted their last token free their slot
+   and return their blocks to the pool;
+2. **admit** — pending requests (arrival <= tick, FIFO) claim a free
+   engine slot and an atomic upfront reservation of
+   ``ceil((prompt + n_steps) / page)`` blocks, prefill their prompt
+   (right-padded to a page multiple; ``last_pos`` slices the true last
+   token's logits) straight into the reserved blocks, and emit their
+   first token.  When the pool or the slot array is exhausted the queue
+   simply waits — admission is the backpressure point;
+3. **decode** — ONE jitted :func:`repro.models.paged_decode_step` call
+   advances every active slot simultaneously: each slot's pending token
+   is written at its own cache offset (``lens``), attention reads
+   through the block table, and the next token is sampled.  Idle slots
+   ride along pointing at the null block, so arrivals and retirements
+   never change the compiled shapes — no recompilation mid-flight.
+
+The old synchronous :class:`~repro.serve.engine.ServeEngine` pads every
+request to a (batch, max_len) bucket and decodes the whole batch for the
+longest request's step count; this engine keeps the same per-token math
+(greedy decode is bit-identical on the same prompts — the parity oracle
+``tests/test_serve_paged.py`` pins) while slot-filling ragged work.
+
+Temperature sampling uses per-request key streams
+(``fold_in(PRNGKey(seed), request_index)``, split once per sampled
+token): a continuously-batched request has no stable batch to share the
+synchronous engine's single key sequence with.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import paged_decode_step, prefill
+from repro.serve.paged_cache import PagedKVCache, default_page_size
+
+__all__ = ["PagedServeEngine", "Request", "RequestResult"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One serve request: ``prompt`` (1-D int32 tokens), ``n_steps``
+    tokens to generate, ``arrival`` tick at which it may be admitted."""
+
+    prompt: np.ndarray
+    n_steps: int
+    arrival: int = 0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    tokens: np.ndarray              # (n_steps,) generated tokens
+    prompt_len: int
+    arrival: int                    # tick the request became eligible
+    admitted: int                   # tick it was admitted
+    finished: int                   # tick its last token was emitted
+    emit_times: List[float]         # perf_counter() per emitted token
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: int                        # index into the request list
+    ids: List[int]                  # reserved pool blocks
+    remaining: int
+    key: jax.Array                  # per-request sampling key stream
+
+
+class PagedServeEngine:
+    """Continuous-batching engine: one compiled decode step, ``max_batch``
+    slots, a :class:`PagedKVCache` pool shared by all in-flight requests.
+
+    ``n_blocks=None`` sizes the pool so every slot can hold a full
+    ``max_len`` request (plus the null block) — pass something smaller
+    to exercise admission backpressure.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
+                 max_batch: int = 8, n_blocks: Optional[int] = None,
+                 page: Optional[int] = None, device=None):
+        if page is None:
+            # cap the planner's block at max_len: an uncapped probe hands
+            # back the largest VMEM-admissible page (512 on every current
+            # device), and short-request engines would then gather, mask
+            # and convert 4x more pool rows per tick than they can use
+            page = default_page_size(cfg, device, cap=max_len)
+        self.page = int(page)
+        self.nb_table = math.ceil(max_len / self.page)
+        if n_blocks is None:
+            n_blocks = max_batch * self.nb_table + 1
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.max_batch = max_batch
+        self.cache = PagedKVCache(cfg, n_blocks=n_blocks, page=self.page,
+                                  device=device)
+        def _step(p, c, t, tbl, ln):
+            # greedy tokens computed in-graph: the scheduler's hot loop
+            # transfers (B,) ints per tick, not (B, V) logits + eager ops
+            logits, new_c = paged_decode_step(cfg, p, c, t, tbl, ln)
+            toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return logits, toks, new_c
+
+        self._decode = jax.jit(_step)
+        self._prefills: Dict[int, object] = {}
+        self._writers: Dict[int, object] = {}
+
+    # -- compiled pieces (cached per padded-length / block-count) ----------
+
+    #: prompts prefill at this granularity, not the page: a 6-token chat
+    #: turn costs a 32-row prefill, and the writer zero-pads rows up to
+    #: the page before scattering (padded rows sit past ``lens``, so the
+    #: kv_len mask never reads them)
+    _PREFILL_BUCKET = 32
+
+    def _prefill_fn(self, sp: int):
+        if sp not in self._prefills:
+            cfg = self.cfg
+            self._prefills[sp] = jax.jit(
+                lambda p, b, lp: prefill(cfg, p, b, max_len=sp, last_pos=lp))
+        return self._prefills[sp]
+
+    def _writer_fn(self, sp: int, nb: int):
+        """Scatter a prefilled (1, sp, ...) cache into ``nb`` pool blocks,
+        zero-padding the ragged tail rows up to the page boundary."""
+        if (sp, nb) not in self._writers:
+            page = self.page
+            rows = nb * page
+
+            def write(pools, pcache, ids):
+                def wr(pool, blk):
+                    # row axis: (.., B=1, sp, KV, hd) -> third from the end
+                    pad = [(0, 0)] * blk.ndim
+                    pad[blk.ndim - 3] = (0, rows - sp)
+                    blk = jnp.pad(blk, pad)
+                    if pool.ndim == 5:      # (n_periods, P, page, KV, hd)
+                        b = blk.reshape((pool.shape[0], nb, page)
+                                        + pool.shape[3:])
+                        return pool.at[:, ids].set(b)
+                    b = blk.reshape((nb, page) + pool.shape[2:])
+                    return pool.at[ids].set(b)
+                return jax.tree.map(wr, pools, pcache)
+
+            self._writers[(sp, nb)] = jax.jit(write)
+        return self._writers[(sp, nb)]
+
+    def _sample(self, logits: jax.Array, key, temperature: float):
+        """logits (V,) -> int token (same math as ServeEngine._sample)."""
+        if temperature <= 0.0:
+            return int(jnp.argmax(logits, axis=-1))
+        return int(jax.random.categorical(key, logits / temperature,
+                                          axis=-1))
+
+    def _sample_tick(self, logits, greedy, keys, temperature: float):
+        """One transfer for a whole decode tick -> (B,) host tokens.
+        Greedy tokens were already computed in-graph (the sync engine's
+        exact row-wise argmax); temperature draws one categorical per
+        slot from that slot's own key stream."""
+        if temperature <= 0.0:
+            return np.asarray(greedy, np.int32)
+        toks = jax.vmap(lambda k, l: jax.random.categorical(
+            k, l / temperature, axis=-1))(jnp.stack(keys), logits)
+        return np.asarray(toks, np.int32)
+
+    # -- the scheduler -----------------------------------------------------
+
+    def run(self, requests: Sequence[Union[Request, Tuple]], *,
+            temperature: float = 0.0, seed: int = 0
+            ) -> Tuple[List[RequestResult], Dict]:
+        """Serve ``requests`` (Request objects or (prompt, n_steps[,
+        arrival]) tuples) to completion.  Returns per-request results in
+        input order plus scheduler stats (ticks, decode steps, occupancy).
+        """
+        reqs = [r if isinstance(r, Request) else Request(*r)
+                for r in requests]
+        for i, r in enumerate(reqs):
+            r.prompt = np.asarray(r.prompt, np.int32).reshape(-1)
+            s = r.prompt.shape[0]
+            if r.n_steps < 1:
+                raise ValueError(f"request {i}: n_steps={r.n_steps} < 1")
+            if s + r.n_steps > self.max_len:
+                raise ValueError(
+                    f"request {i} does not fit: prompt length {s} + n_steps "
+                    f"{r.n_steps} = {s + r.n_steps} exceeds this engine's "
+                    f"max_len of {self.max_len}")
+
+        root = jax.random.PRNGKey(seed)
+        results: List[Optional[RequestResult]] = [None] * len(reqs)
+        out_tokens: List[List[int]] = [[] for _ in reqs]
+        emit_times: List[List[float]] = [[] for _ in reqs]
+        admitted_at = [-1] * len(reqs)
+        # FIFO by (arrival, submission order)
+        queue = sorted(range(len(reqs)), key=lambda i: (reqs[i].arrival, i))
+
+        B, NB = self.max_batch, self.nb_table
+        slots: List[Optional[_Slot]] = [None] * B
+        tables = np.zeros((B, NB), np.int32)          # null block everywhere
+        lens = np.zeros((B,), np.int32)
+        pend = np.zeros((B,), np.int32)
+        pools = self.cache.pools
+
+        tick = 0
+        decode_steps = 0
+        occupancy: List[float] = []
+
+        def emit(rid: int, tok: int) -> None:
+            out_tokens[rid].append(tok)
+            emit_times[rid].append(time.perf_counter())
+
+        def retire(si: int) -> None:
+            slot = slots[si]
+            self.cache.free(slot.ids)
+            rid = slot.req
+            results[rid] = RequestResult(
+                tokens=np.asarray(out_tokens[rid], np.int32),
+                prompt_len=reqs[rid].prompt.shape[0],
+                arrival=reqs[rid].arrival, admitted=admitted_at[rid],
+                finished=tick, emit_times=emit_times[rid])
+            slots[si] = None
+            tables[si] = 0
+            lens[si] = 0
+
+        while queue or any(s is not None for s in slots):
+            # admit: FIFO while a slot and the block reservation both fit
+            while queue and reqs[queue[0]].arrival <= tick:
+                free_slots = [i for i, s in enumerate(slots) if s is None]
+                if not free_slots:
+                    break
+                rid = queue[0]
+                r = reqs[rid]
+                s = r.prompt.shape[0]
+                need = math.ceil((s + r.n_steps) / self.page)
+                ids = self.cache.alloc(need)
+                if ids is None:
+                    if not any(sl is not None for sl in slots):
+                        raise ValueError(
+                            f"request {rid} needs {need} blocks but the "
+                            f"pool only has {self.cache.capacity}; grow "
+                            "n_blocks or shorten the request")
+                    break                     # wait for retirements
+                queue.pop(0)
+                si = free_slots[0]
+                key = jax.random.fold_in(root, rid)
+                bucket = self._PREFILL_BUCKET
+                sp = bucket * math.ceil(s / bucket)
+                batch = {"tokens": jnp.asarray(
+                    np.pad(r.prompt, (0, sp - s))[None], jnp.int32)}
+                logits, pcache = self._prefill_fn(sp)(
+                    self.params, batch, jnp.int32(s - 1))
+                nb_prompt = math.ceil(s / self.page)
+                pools = self._writer_fn(sp, nb_prompt)(
+                    pools, pcache, jnp.asarray(ids[:nb_prompt], jnp.int32))
+                # same serialization as the decode tick below: don't let
+                # the scatter-write overlap the next dispatch
+                jax.block_until_ready(pools)
+                key, sub = jax.random.split(key)
+                tok = self._sample(logits[0, -1], sub, temperature)
+                admitted_at[rid] = tick
+                slots[si] = _Slot(req=rid, ids=ids, remaining=r.n_steps - 1,
+                                  key=key)
+                tables[si, :] = 0
+                tables[si, :need] = ids
+                lens[si] = s
+                pend[si] = tok
+                emit(rid, tok)
+                if slots[si].remaining == 0:
+                    retire(si)
+
+            occupancy.append(self.cache.occupancy())
+
+            active = [i for i, s in enumerate(slots) if s is not None]
+            if active:
+                # jnp.array (not asarray): asarray zero-copies numpy on CPU,
+                # so the async decode would alias these host buffers while
+                # the scheduler keeps mutating them (retire zeroes table
+                # rows, lens advance) — a read/write race on real state
+                logits, greedy, pools = self._decode(
+                    self.params, pools, jnp.array(pend[:, None]),
+                    jnp.array(tables), jnp.array(lens))
+                # materialize the whole tick before dispatching anything
+                # else: overlapping executions on XLA:CPU's shared thunk
+                # thread pool perturb parallel-reduction numerics, and a
+                # near-tie argmax flip breaks bitwise greedy parity with
+                # the synchronous engine (whose single lax.scan decode
+                # loop never overlaps itself).  The greedy-token transfer
+                # below already serialized most of the tick; this pins
+                # the pool updates too, so no computation from run() is
+                # ever still in flight when the caller's next one starts.
+                jax.block_until_ready((logits, greedy, pools))
+                decode_steps += 1
+                lens[active] += 1
+                keys = None
+                if temperature > 0.0:
+                    keys = []
+                    for si in range(B):
+                        if slots[si] is not None:
+                            slots[si].key, sub = jax.random.split(
+                                slots[si].key)
+                            keys.append(sub)
+                        else:
+                            keys.append(root)     # idle slot: discarded
+                toks = self._sample_tick(logits[:, -1], greedy, keys,
+                                         temperature)
+                for si in active:
+                    slot = slots[si]
+                    tok = int(toks[si])
+                    pend[si] = tok
+                    emit(slot.req, tok)
+                    slot.remaining -= 1
+                    if slot.remaining == 0:
+                        retire(si)
+            elif not queue:
+                break
+            tick += 1
+
+        self.cache.pools = pools
+        stats = {
+            "ticks": tick,
+            "decode_steps": decode_steps,
+            "requests": len(reqs),
+            "tokens": sum(len(t) for t in out_tokens),
+            "occupancy_mean": float(np.mean(occupancy)) if occupancy else 0.0,
+            "occupancy_max": float(np.max(occupancy)) if occupancy else 0.0,
+        }
+        return [r for r in results if r is not None], stats
+
+    def generate(self, tokens: np.ndarray, *, n_steps: int = 32,
+                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+        """Batch convenience mirroring ``ServeEngine.generate``: serve the
+        (B, S) prompts (all arriving at tick 0) and return (B, n_steps)."""
+        tokens = np.asarray(tokens, np.int32)
+        reqs = [Request(prompt=row, n_steps=n_steps) for row in tokens]
+        results, _ = self.run(reqs, temperature=temperature, seed=seed)
+        return np.stack([r.tokens for r in results])

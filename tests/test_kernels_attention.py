@@ -153,6 +153,105 @@ def test_decode_ragged_cache_pad():
 
 
 # ---------------------------------------------------------------------------
+# Per-request kv_len vectors + the block-paged decode variant
+# ---------------------------------------------------------------------------
+
+def test_decode_vector_kv_len():
+    """A (B,) per-request length vector: each row masks independently."""
+    B, T, H, KV, hd = 3, 256, 8, 2, 64
+    q = jnp.asarray(RNG.randn(B, H, hd), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, T, KV, hd), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, T, KV, hd), jnp.float32)
+    lens = jnp.asarray([65, 128, 255], jnp.int32)
+    y = ops.decode_attention(q, k, v, lens, block_kv=128)
+    yr = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                               atol=1e-4)
+    # backward compat: a scalar is every-row broadcast of the vector form
+    ys = ops.decode_attention(q, k, v, jnp.int32(65), block_kv=128)
+    yv = ops.decode_attention(q, k, v, jnp.full((B,), 65, jnp.int32),
+                              block_kv=128)
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(yv), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_decode_vector_kv_len_bad_shape_raises():
+    import pytest
+    B, T, H, KV, hd = 2, 128, 4, 2, 32
+    q = jnp.zeros((B, H, hd), jnp.float32)
+    k = jnp.zeros((B, T, KV, hd), jnp.float32)
+    v = jnp.zeros((B, T, KV, hd), jnp.float32)
+    with pytest.raises(ValueError, match="kv_len"):
+        ops.decode_attention(q, k, v, jnp.zeros((B, 2), jnp.int32),
+                             block_kv=128)
+
+
+def _paged_case(B, n_prompt_blocks, page, KV, hd, H, dt, seed=11):
+    """Pools + shuffled per-request block tables + ragged kv_lens."""
+    rng = np.random.RandomState(seed)
+    P = B * n_prompt_blocks + 1                  # + the null block 0
+    q = jnp.asarray(rng.randn(B, H, hd), dt)
+    k_pool = jnp.asarray(rng.randn(P, page, KV, hd), dt)
+    v_pool = jnp.asarray(rng.randn(P, page, KV, hd), dt)
+    perm = rng.permutation(np.arange(1, P))      # blocks land anywhere
+    tables = jnp.asarray(perm.reshape(B, n_prompt_blocks), jnp.int32)
+    return q, k_pool, v_pool, tables
+
+
+@pytest.mark.parametrize("lens", [
+    [256, 256],            # aligned full blocks
+    [129, 200],            # partial last block
+    [1, 255],              # single-key edge + almost-full
+])
+def test_paged_decode_vs_contiguous(lens):
+    """Gathering the table into a contiguous cache and running plain
+    decode_attention must match the paged kernel bit-for-tolerance."""
+    B, NB, page, H, KV, hd = 2, 2, 128, 4, 2, 32
+    q, k_pool, v_pool, tables = _paged_case(B, NB, page, KV, hd, H,
+                                            jnp.float32)
+    kv_len = jnp.asarray(lens, jnp.int32)
+    y = ops.paged_decode_attention(q, k_pool, v_pool, tables, kv_len)
+    k = k_pool[tables].reshape(B, NB * page, KV, hd)
+    v = v_pool[tables].reshape(B, NB * page, KV, hd)
+    yc = ops.decode_attention(q, k, v, kv_len, block_kv=page)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yc), rtol=1e-5,
+                               atol=1e-5)
+    yr = ref.paged_decode_attention_ref(q, k_pool, v_pool, tables, kv_len)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_paged_decode_ignores_unmapped_blocks():
+    """Junk in pool blocks outside every table (incl. the null block)
+    must never leak into results."""
+    B, NB, page, H, KV, hd = 2, 2, 128, 4, 2, 32
+    q, k_pool, v_pool, tables = _paged_case(B, NB, page, KV, hd, H,
+                                            jnp.float32)
+    kv_len = jnp.asarray([200, 129], jnp.int32)
+    y1 = ops.paged_decode_attention(q, k_pool, v_pool, tables, kv_len)
+    k2 = k_pool.at[0].set(1e4)                   # poison the null block
+    v2 = v_pool.at[0].set(-1e4)
+    y2 = ops.paged_decode_attention(q, k2, v2, tables, kv_len)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_paged_decode_page_block_mismatch_raises():
+    """A plan whose block_kv != the pool page is a geometry bug: raise."""
+    import pytest
+    from repro.kernels import plan_for
+    B, NB, page, H, KV, hd = 1, 1, 128, 4, 2, 32
+    q, k_pool, v_pool, tables = _paged_case(B, NB, page, KV, hd, H,
+                                            jnp.float32)
+    plan = plan_for("paged_decode_attention",
+                    {"B": B, "T": 256, "H": H, "KV": KV, "hd": hd,
+                     "page": 256})
+    with pytest.raises(ValueError, match="page"):
+        ops.paged_decode_attention(q, k_pool, v_pool, tables,
+                                   jnp.asarray([100], jnp.int32), plan=plan)
+
+
+# ---------------------------------------------------------------------------
 # Tiling contract: misalignment raises instead of silently clamping
 # ---------------------------------------------------------------------------
 

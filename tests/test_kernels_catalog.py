@@ -28,6 +28,8 @@ SHAPES = {
     "flash_attention": {"B": 1, "S": 128, "T": 128, "H": 2, "KV": 1,
                         "hd": 64},
     "decode_attention": {"B": 1, "T": 256, "H": 4, "KV": 2, "hd": 32},
+    "paged_decode_attention": {"B": 2, "T": 512, "H": 4, "KV": 2, "hd": 32,
+                               "page": 128},
     "mamba2_ssd": {"B": 1, "S": 64, "nh": 2, "hd": 16, "ds": 16},
 }
 
@@ -39,6 +41,8 @@ BIG_SHAPES = {
     "flash_attention": {"B": 8, "S": 4096, "T": 4096, "H": 32, "KV": 8,
                         "hd": 128},
     "decode_attention": {"B": 8, "T": 8192, "H": 32, "KV": 8, "hd": 128},
+    "paged_decode_attention": {"B": 8, "T": 8192, "H": 32, "KV": 8,
+                               "hd": 128, "page": 512},
     "mamba2_ssd": {"B": 8, "S": 4096, "nh": 32, "hd": 64, "ds": 128},
 }
 
@@ -65,6 +69,22 @@ def _case(kernel: str, s, dt):
         v = jnp.asarray(RNG.randn(s["B"], s["T"], s["KV"], s["hd"]), dt)
         kv_len = jnp.int32(s["T"] - 63)
         return (q, k, v, kv_len), (q, k, v, kv_len)
+    if kernel == "paged_decode_attention":
+        page, B = s["page"], s["B"]
+        nb = s["T"] // page
+        P = B * nb + 1                       # + the reserved null block
+        q = jnp.asarray(RNG.randn(B, s["H"], s["hd"]), dt)
+        k_pool = jnp.asarray(RNG.randn(P, page, s["KV"], s["hd"]), dt)
+        v_pool = jnp.asarray(RNG.randn(P, page, s["KV"], s["hd"]), dt)
+        # shuffled tables: logical order != physical order, like a real
+        # free-list allocation pattern
+        perm = RNG.permutation(np.arange(1, P))
+        tables = jnp.asarray(perm.reshape(B, nb), jnp.int32)
+        # ragged per-request lengths incl. a partial last block
+        kv_len = jnp.asarray(
+            [s["T"] - 63 - 17 * (i % 3) for i in range(B)], jnp.int32)
+        args = (q, k_pool, v_pool, tables, kv_len)
+        return args, args
     if kernel == "mamba2_ssd":
         x = jnp.asarray(RNG.randn(s["B"], s["S"], s["nh"], s["hd"]) * 0.5, dt)
         dt_in = jnp.asarray(
@@ -82,13 +102,15 @@ def _case(kernel: str, s, dt):
 def _tol(kernel, dt):
     if dt == jnp.bfloat16:
         return dict(rtol=5e-2, atol=5e-2)
-    loose = kernel in ("flash_attention", "decode_attention", "mamba2_ssd")
+    loose = kernel in ("flash_attention", "decode_attention",
+                       "paged_decode_attention", "mamba2_ssd")
     return dict(rtol=2e-3, atol=2e-3) if loose else dict(rtol=5e-4, atol=5e-4)
 
 
 def test_catalog_is_complete():
     assert list(list_kernels()) == ["decode_attention", "flash_attention",
-                                    "mamba2_ssd", "mfma_gemm", "moe_gmm"]
+                                    "mamba2_ssd", "mfma_gemm", "moe_gmm",
+                                    "paged_decode_attention"]
 
 
 @pytest.mark.parametrize("device", DEVICES)
@@ -169,6 +191,7 @@ RAGGED_SHAPES = {
     "flash_attention": {"B": 1, "S": 100, "T": 100, "H": 4, "KV": 2,
                         "hd": 32},
     "decode_attention": {"B": 2, "T": 100, "H": 4, "KV": 2, "hd": 32},
+    "paged_decode_attention": {"B": 2, "T": 100, "H": 4, "KV": 2, "hd": 32},
     "mamba2_ssd": {"B": 1, "S": 52, "nh": 2, "hd": 16, "ds": 16},
 }
 
@@ -181,6 +204,7 @@ _RAGGED_DIMS = {
                 "N": ("block_n", "mxu")},
     "flash_attention": {"S": ("block_q", "mxu"), "T": ("block_kv", "mxu")},
     "decode_attention": {"T": ("block_kv", "mxu")},
+    "paged_decode_attention": {"T": ("block_kv", "mxu")},
     "mamba2_ssd": {"S": ("chunk", "sublane")},
 }
 

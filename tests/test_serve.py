@@ -44,6 +44,31 @@ def test_bucket_overflow_raises_value_error():
     assert out.tokens.shape == (1, 8)
 
 
+def test_sampling_keys_distinct_and_root_never_consumed():
+    """Regression: the first sampled token used the raw root PRNGKey and
+    step 0 reused it via the first split — two draws from one key.  The
+    root must only ever be split: every key handed to ``_sample`` has to
+    differ from ``PRNGKey(seed)`` and from every other sampling key."""
+    eng = ServeEngine(CFG, PARAMS, max_len=64)
+    seen = []
+    orig = eng._sample
+
+    def spy(logits, key, temperature):
+        seen.append(np.asarray(key))
+        return orig(logits, key, temperature)
+
+    eng._sample = spy
+    eng.generate(np.ones((1, 8), np.int32), n_steps=4, temperature=1.0,
+                 seed=0)
+    root = np.asarray(jax.random.PRNGKey(0))
+    assert len(seen) == 5                        # prefill sample + 4 steps
+    for k in seen:
+        assert not np.array_equal(k, root)
+    for i in range(len(seen)):
+        for j in range(i + 1, len(seen)):
+            assert not np.array_equal(seen[i], seen[j]), (i, j)
+
+
 def test_batch_isolation():
     """Each request decodes independently of its batch neighbours."""
     eng = ServeEngine(CFG, PARAMS, max_len=64)
