@@ -1,26 +1,40 @@
 """Trace-replay serve benchmark: continuous batching vs the synchronous
-bucket engine on a ragged (arrival x prompt-length x output-length) mix.
+bucket engine, plus the prefix-cache / chunked-prefill scenarios.
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--small]
         [--out BENCH_serve.json] [--check-against BENCH_serve.json]
         [--threshold 0.25] [--min-speedup 1.5]
+        [--min-prefix-hit 0.5] [--min-prefix-speedup 1.1]
 
-Both engines serve the SAME request trace on the same reduced model
-config.  The synchronous baseline does what ``ServeEngine`` can do:
-FIFO batches of ``max_batch``, every prompt right-padded to the batch
-max, every request decoded for the batch-max step count — the padding
-and convoy waste continuous batching exists to remove.  The continuous
-engine slot-fills the ragged trace through one compiled decode step
-over the block-paged KV cache.
+Scenarios (all on the same reduced model config):
 
-Both replays are timed warm (the trace runs once to populate jit
-caches, then the timed pass) so the number is steady-state serving
-throughput, not compile time.  Reported per engine: tokens/s over
-*requested* tokens, p50/p99 per-token latency, and (continuous only)
-cache-block occupancy.  ``--check-against`` applies the same
-speed-normalised >threshold regression gate as ``perf_smoke.py``;
-``--min-speedup`` additionally fails the run if continuous batching
-stops beating the synchronous baseline by the given factor.
+* **base** — ragged (arrival x prompt x output) mix, synchronous bucket
+  replay vs the continuous engine.  The synchronous baseline does what
+  ``ServeEngine`` can do: FIFO batches of ``max_batch``, every prompt
+  right-padded to the batch max, every request decoded for the
+  batch-max step count — the padding and convoy waste continuous
+  batching exists to remove.
+* **shared_prefix** — requests sharing a 2-page system prompt (the
+  shared-system-prompt trace recipe: one fixed 256-token prefix, short
+  unique tails).  The same trace runs with the prefix cache on and off
+  (``prefix_cache=False``): the cached run admits later requests by
+  refcount bumps + tail-only chunk prefill, so per-token latency and
+  TTFT drop while the hit rate shows up in the stats payload.
+* **long_prompt** — long multi-page prompts arriving amid short
+  decode-heavy traffic; chunked incremental prefill (32-token chunks
+  interleaved with decode ticks) vs monolithic admission
+  (``prefill_chunk=max_len``: the whole prompt in one stall).  The
+  headline here is the p99 per-token gap, the stall chunking bounds.
+
+All replays are timed warm (one run to populate jit caches, then the
+timed pass).  Reported per engine: tokens/s over *requested* tokens,
+p50/p99 per-token latency, TTFT (admission -> first emit) p50/p99, and
+prefix-cache hit rate where applicable.  ``--check-against`` applies
+the same speed-normalised >threshold regression gate as
+``perf_smoke.py``; ``--min-speedup`` fails the run if continuous
+batching stops beating the synchronous baseline; ``--min-prefix-hit`` /
+``--min-prefix-speedup`` gate the shared-prefix scenario's hit rate and
+its cached-vs-nocache per-token speedup.
 """
 
 import argparse
@@ -38,6 +52,11 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 MAX_LEN = 128
 MAX_BATCH = 8
+
+# shared-prefix / long-prompt scenarios need multi-page prompts: pages
+# are MXU-aligned (128 rows), so sharing starts at prompts > 128 tokens
+SP_MAX_LEN = 384
+SP_PREFIX = 256
 
 
 def make_trace(n_requests, vocab, seed=0):
@@ -59,36 +78,98 @@ def make_trace(n_requests, vocab, seed=0):
     return reqs
 
 
-def run_continuous(cfg, params, trace):
-    from repro.serve import PagedServeEngine, Request
+def make_shared_trace(n_requests, vocab, seed=0, prefix_len=SP_PREFIX):
+    """Shared-system-prompt recipe: one fixed ``prefix_len``-token prefix
+    (page-aligned so its pages hash into the prefix index), a short
+    unique tail per request, staggered arrivals."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, (prefix_len,)).astype(np.int32)
+    reqs = []
+    tick = 0
+    for i in range(n_requests):
+        tick += int(rng.poisson(1))
+        tail = rng.integers(0, vocab,
+                            (int(rng.integers(8, 48)),)).astype(np.int32)
+        n = int(rng.integers(6, 20))
+        reqs.append((np.concatenate([prefix, tail]), n, tick))
+    return reqs
 
-    eng = PagedServeEngine(cfg, params, max_len=MAX_LEN,
-                           max_batch=MAX_BATCH)
-    reqs = [Request(prompt=p, n_steps=n, arrival=a) for p, n, a in trace]
-    eng.run(reqs)                                  # warm the jit caches
-    t0 = time.perf_counter()
-    results, stats = eng.run(reqs)
-    wall = time.perf_counter() - t0
-    tokens = stats["tokens"]
-    # per-token latency: gap to the previous emission of the same
-    # request (first token: gap from replay start)
-    lats = []
+
+def make_longprompt_trace(n_requests, vocab, seed=0):
+    """Long-prompt-under-load: every 4th request drags a multi-page
+    prompt through admission while short decode-heavy requests stream —
+    the monolithic-prefill stall lands on *their* token gaps."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    tick = 0
+    for i in range(n_requests):
+        tick += int(rng.poisson(1))
+        if i % 4 == 1:
+            s = int(rng.integers(200, 340))
+            n = int(rng.integers(4, 10))
+        else:
+            s = int(rng.integers(8, 48))
+            n = int(rng.integers(12, 32))
+        prompt = rng.integers(0, vocab, (s,)).astype(np.int32)
+        reqs.append((prompt, n, tick))
+    return reqs
+
+
+def _latency_stats(results, t0):
+    """Per-token gap latencies + TTFT (admission -> first emit)."""
+    lats, ttfts = [], []
     for r in results:
         prev = t0
         for t in r.emit_times:
             lats.append(t - prev)
             prev = t
+        if r.emit_times:
+            ttfts.append(r.emit_times[0] - r.admit_time)
     lats = np.asarray(sorted(lats))
+    ttfts = np.asarray(sorted(ttfts)) if ttfts else np.zeros(1)
     return {
+        "p50_token_ms": round(float(np.percentile(lats, 50)) * 1e3, 3),
+        "p99_token_ms": round(float(np.percentile(lats, 99)) * 1e3, 3),
+        "ttft_p50_ms": round(float(np.percentile(ttfts, 50)) * 1e3, 3),
+        "ttft_p99_ms": round(float(np.percentile(ttfts, 99)) * 1e3, 3),
+    }
+
+
+_REPEATS = 5       # recorded runs per engine; best wall wins (CI VMs see
+                    # bursty neighbour noise that spikes individual runs
+                    # by 10-20%, and min-filtering over enough repeats is
+                    # the standard way to reject it)
+
+
+def run_continuous(cfg, params, trace, *, max_len=MAX_LEN,
+                   max_batch=MAX_BATCH, **engine_kw):
+    from repro.serve import PagedServeEngine, Request
+
+    eng = PagedServeEngine(cfg, params, max_len=max_len,
+                           max_batch=max_batch, **engine_kw)
+    reqs = [Request(prompt=p, n_steps=n, arrival=a) for p, n, a in trace]
+    eng.run(reqs)                                  # warm the jit caches
+    wall, t0, results, stats = math.inf, 0.0, None, None
+    for _ in range(_REPEATS):
+        t0_i = time.perf_counter()
+        results_i, stats_i = eng.run(reqs)
+        wall_i = time.perf_counter() - t0_i
+        if wall_i < wall:
+            wall, t0, results, stats = wall_i, t0_i, results_i, stats_i
+    tokens = stats["tokens"]
+    out = {
         "wall_s": round(wall, 4),
         "tokens": tokens,
         "tokens_per_s": round(tokens / wall, 2),
-        "p50_token_ms": round(float(np.percentile(lats, 50)) * 1e3, 3),
-        "p99_token_ms": round(float(np.percentile(lats, 99)) * 1e3, 3),
         "occupancy_mean": round(stats["occupancy_mean"], 4),
         "occupancy_max": round(stats["occupancy_max"], 4),
         "decode_steps": stats["decode_steps"],
+        "prefill_chunks": stats["prefill_chunks"],
+        "prefix_hit_rate": round(stats["prefix_hit_rate"], 4),
+        "prefix_blocks_reused": stats["prefix_blocks_reused"],
     }
+    out.update(_latency_stats(results, t0))
+    return out
 
 
 def run_sync(cfg, params, trace):
@@ -121,9 +202,13 @@ def run_sync(cfg, params, trace):
         return lats
 
     replay(record=False)                           # warm the jit caches
-    t0 = time.perf_counter()
-    lats = replay(record=True)
-    wall = time.perf_counter() - t0
+    wall, lats = math.inf, None
+    for _ in range(_REPEATS):
+        t0 = time.perf_counter()
+        lats_i = replay(record=True)
+        wall_i = time.perf_counter() - t0
+        if wall_i < wall:
+            wall, lats = wall_i, lats_i
     tokens = sum(n for _, n, _ in trace)           # requested tokens only
     lats = np.asarray(sorted(lats))
     return {
@@ -151,6 +236,13 @@ def main() -> int:
     ap.add_argument("--min-speedup", type=float, default=None,
                     help="fail unless continuous tokens/s >= this factor "
                          "of the synchronous baseline")
+    ap.add_argument("--min-prefix-hit", type=float, default=None,
+                    help="fail unless the shared-prefix scenario's "
+                         "prefix-cache hit rate reaches this fraction")
+    ap.add_argument("--min-prefix-speedup", type=float, default=None,
+                    help="fail unless prefix caching beats the no-sharing "
+                         "engine on shared-prefix per-token latency by "
+                         "this factor")
     args = ap.parse_args()
 
     import jax
@@ -167,16 +259,42 @@ def main() -> int:
     speedup = round(cont["tokens_per_s"] / sync["tokens_per_s"], 3)
     cont["speedup_vs_sync"] = speedup
 
+    n_shared = max(6, n_requests // 2)
+    shared = make_shared_trace(n_shared, cfg.vocab_size, seed=args.seed)
+    # page=128 (not the planner's 384 pick at this cap): the 256-token
+    # system prompt must span whole pages or nothing hashes into the
+    # prefix index and the cached run degenerates to the nocache one
+    sp_cached = run_continuous(cfg, params, shared, max_len=SP_MAX_LEN,
+                               max_batch=4, page=128)
+    sp_nocache = run_continuous(cfg, params, shared, max_len=SP_MAX_LEN,
+                                max_batch=4, page=128, prefix_cache=False)
+    sp_speedup = round(sp_nocache["wall_s"] / sp_cached["wall_s"], 3)
+    sp_cached["speedup_vs_nocache"] = sp_speedup
+
+    n_long = max(6, n_requests // 2)
+    longp = make_longprompt_trace(n_long, cfg.vocab_size, seed=args.seed)
+    lp_chunked = run_continuous(cfg, params, longp, max_len=SP_MAX_LEN,
+                                max_batch=4, page=128, prefill_chunk=32)
+    lp_mono = run_continuous(cfg, params, longp, max_len=SP_MAX_LEN,
+                             max_batch=4, page=128,
+                             prefill_chunk=SP_MAX_LEN)
+
     rows = []
-    for name, r in (("sync", sync), ("continuous", cont)):
+    for name, r in (("sync", sync), ("continuous", cont),
+                    ("shared_prefix_cached", sp_cached),
+                    ("shared_prefix_nocache", sp_nocache),
+                    ("longprompt_chunked", lp_chunked),
+                    ("longprompt_monolithic", lp_mono)):
         us = 1e6 * r["wall_s"] / r["tokens"]
         rows.append({"name": f"{name}_us_per_token",
                      "us_per_call": round(us, 3), "derived": r})
     payload = {
-        "schema": "bench_serve/v1",
+        "schema": "bench_serve/v2",
         "python": platform.python_version(),
         "config": {"arch": cfg.name, "max_len": MAX_LEN,
                    "max_batch": MAX_BATCH, "requests": n_requests,
+                   "sp_max_len": SP_MAX_LEN, "sp_prefix": SP_PREFIX,
+                   "shared_requests": n_shared, "long_requests": n_long,
                    "small": args.small, "seed": args.seed},
         "results": {"serve": rows},
     }
@@ -191,11 +309,39 @@ def main() -> int:
           f"  ({cont['decode_steps']} decode steps, "
           f"occupancy {cont['occupancy_mean']:.0%})")
     print(f"[serve_bench] speedup    : {speedup:.2f}x")
+    print(f"[serve_bench] shared-prefix cached : "
+          f"{sp_cached['tokens_per_s']:8.1f} tok/s  "
+          f"ttft p50 {sp_cached['ttft_p50_ms']:.2f}ms  "
+          f"hit rate {sp_cached['prefix_hit_rate']:.0%}")
+    print(f"[serve_bench] shared-prefix nocache: "
+          f"{sp_nocache['tokens_per_s']:8.1f} tok/s  "
+          f"ttft p50 {sp_nocache['ttft_p50_ms']:.2f}ms")
+    print(f"[serve_bench] prefix-cache speedup : {sp_speedup:.2f}x "
+          "(per-token latency, shared-prefix trace)")
+    print(f"[serve_bench] long-prompt chunked  : "
+          f"p99 {lp_chunked['p99_token_ms']:.2f}ms  "
+          f"ttft p99 {lp_chunked['ttft_p99_ms']:.2f}ms  "
+          f"({lp_chunked['prefill_chunks']} chunks)")
+    print(f"[serve_bench] long-prompt monolith : "
+          f"p99 {lp_mono['p99_token_ms']:.2f}ms  "
+          f"ttft p99 {lp_mono['ttft_p99_ms']:.2f}ms  "
+          f"({lp_mono['prefill_chunks']} chunks)")
 
     rc = 0
     if args.min_speedup is not None and speedup < args.min_speedup:
         print(f"[serve_bench] FAIL: speedup {speedup:.2f}x < required "
               f"{args.min_speedup:.2f}x")
+        rc = 1
+    if (args.min_prefix_hit is not None
+            and sp_cached["prefix_hit_rate"] < args.min_prefix_hit):
+        print(f"[serve_bench] FAIL: prefix hit rate "
+              f"{sp_cached['prefix_hit_rate']:.2f} < required "
+              f"{args.min_prefix_hit:.2f}")
+        rc = 1
+    if (args.min_prefix_speedup is not None
+            and sp_speedup < args.min_prefix_speedup):
+        print(f"[serve_bench] FAIL: prefix-cache speedup {sp_speedup:.2f}x "
+              f"< required {args.min_prefix_speedup:.2f}x")
         rc = 1
     if args.check_against:
         from benchmarks.perf_smoke import check_against

@@ -46,9 +46,9 @@ from repro.models.layers import cdtype, dense, mm, norm_apply, rope
 from repro.parallel.api import current_mesh, shard
 
 __all__ = ["init_attn", "attn_train", "attn_decode", "attn_decode_paged",
-           "init_mla", "mla_train", "mla_decode", "init_cross", "cross_train",
-           "cross_decode", "init_attn_cache", "init_mla_cache", "sdpa",
-           "attention"]
+           "attn_prefill_paged", "init_mla", "mla_train", "mla_decode",
+           "init_cross", "cross_train", "cross_decode", "init_attn_cache",
+           "init_mla_cache", "sdpa", "attention"]
 
 _FLASH_BLOCK = 512
 _FLASH_MIN_T = 2048     # plain sdpa below this KV length
@@ -85,16 +85,25 @@ def _kv_len_bc(kv_len) -> jax.Array:
 
 def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
          scale: float, kv_len: Optional[jax.Array] = None,
-         q_offset: int = 0) -> jax.Array:
+         q_offset=0) -> jax.Array:
     """Plain SDPA over full heads.  q: (B,S,H,hd); k/v: (B,T,H,hd).
-    ``kv_len`` is an int32 scalar or a per-request (B,) vector."""
+    ``kv_len`` is an int32 scalar or a per-request (B,) vector;
+    ``q_offset`` (global index of q's first row for the causal mask) is
+    an int scalar or a per-request (B,) vector — the paged continuation
+    prefill decodes chunks sitting at a different offset per request."""
     B, S, H, hd = q.shape
     T = k.shape[1]
     logits = mm("bshd,bthd->bhst", q, k) * scale
     if causal and S > 1:
-        i = jax.lax.broadcasted_iota(jnp.int32, (S, T), 0) + q_offset
         j = jax.lax.broadcasted_iota(jnp.int32, (S, T), 1)
-        logits = jnp.where((j <= i)[None, None], logits, _NEG_INF)
+        qo = jnp.asarray(q_offset, jnp.int32)
+        if qo.ndim == 1:
+            i = (jax.lax.broadcasted_iota(jnp.int32, (S, T), 0)[None, None]
+                 + qo[:, None, None, None])
+            logits = jnp.where(j[None, None] <= i, logits, _NEG_INF)
+        else:
+            i = jax.lax.broadcasted_iota(jnp.int32, (S, T), 0) + q_offset
+            logits = jnp.where((j <= i)[None, None], logits, _NEG_INF)
     if kv_len is not None:
         t = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, T), 3)
         logits = jnp.where(t < _kv_len_bc(kv_len), logits, _NEG_INF)
@@ -411,6 +420,80 @@ def attn_decode_paged(cfg: ModelConfig, w, x: jax.Array, cache: Dict,
                         use_pallas=cfg.use_pallas,
                         pallas_device=cfg.pallas_device)
     y = dense(out.reshape(B, S, cfg.n_heads * cfg.hd), w["wo"])
+    return y, {"k": k, "v": v}
+
+
+def attn_prefill_paged(cfg: ModelConfig, w, x: jax.Array, cache: Dict,
+                       block_tables: jax.Array, lens: jax.Array,
+                       n_valid: jax.Array, *,
+                       aligned: bool = False) -> Tuple[jax.Array, Dict]:
+    """One continuation-prefill chunk against the shared KV pool.
+
+    x: (B, C, D) — a fixed-size chunk of each request's *uncached* prompt
+    suffix, right-padded past ``n_valid``; cache ``{"k", "v"}``: the
+    (P, page, KV, hd) block pools; block_tables (B, NB) / lens (B,) as in
+    :func:`attn_decode_paged` — ``lens`` is the number of tokens already
+    in the cache, i.e. the chunk's global start position (both its write
+    offset and its RoPE base).  The chunk's K/V rows are written into
+    the pool first, then attention reads the whole table back as a dense
+    cache — the prefix written by earlier chunks or *shared with other
+    requests via the block table* is attended exactly like self-owned
+    rows.  The causal mask runs at per-request global offsets, so chunked
+    prefill computes the same masked logits full prefill would.
+
+    ``aligned=True`` is a caller promise that B == 1 and every chunk
+    lies inside a single block — the engine guarantees this whenever the
+    chunk size divides the page, since chunks then start at multiples of
+    C past a page boundary.  The write collapses to one contiguous
+    ``dynamic_update_slice`` instead of a computed-index row scatter
+    (~4.5x cheaper on XLA:CPU), bitwise-identical for every row that is
+    ever read: padded rows past ``n_valid`` land just past the valid
+    prefix inside the request's own last block (instead of the null
+    block), where kv_len masks them this call and decode overwrites
+    position ``s`` before any later read reaches it.
+    """
+    B, C, D = x.shape
+    lens = jnp.asarray(lens, jnp.int32)
+    nv = jnp.asarray(n_valid, jnp.int32)
+    positions = lens[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _qkv(cfg, w, x, positions)
+    P, page, KV, hd = cache["k"].shape
+    tables = jnp.asarray(block_tables, jnp.int32)
+    if aligned and B == 1 and C <= page:
+        # single-block chunk: one contiguous C-row window in the flat pool
+        start = tables[0, lens[0] // page] * page + lens[0] % page
+        k = jax.lax.dynamic_update_slice(
+            cache["k"].reshape(P * page, KV, hd),
+            k_new.reshape(C, KV, hd), (start, 0, 0)).reshape(P, page, KV, hd)
+        v = jax.lax.dynamic_update_slice(
+            cache["v"].reshape(P * page, KV, hd),
+            v_new.reshape(C, KV, hd), (start, 0, 0)).reshape(P, page, KV, hd)
+    else:
+        # scatter the chunk's K/V rows at their global positions; rows
+        # past n_valid (chunk padding) are redirected to the null block,
+        # whose content is never attended unmasked
+        blk = jnp.take_along_axis(tables, positions // page, axis=1)
+        idx = blk * page + positions % page
+        row = jnp.arange(C, dtype=jnp.int32)[None, :]
+        idx = jnp.where(row < nv[:, None], idx, row % page)
+        k = cache["k"].reshape(P * page, KV, hd).at[idx.reshape(-1)].set(
+            k_new.reshape(B * C, KV, hd)).reshape(P, page, KV, hd)
+        v = cache["v"].reshape(P * page, KV, hd).at[idx.reshape(-1)].set(
+            v_new.reshape(B * C, KV, hd)).reshape(P, page, KV, hd)
+    # read path: gather the table into a dense (B, NB*page, KV, hd) cache
+    # (exactly the decode tick's read) and attend causally at each
+    # request's own offset.  kv_len additionally masks rows the causal
+    # mask cannot see when C == 1; for valid rows it masks a subset of
+    # what causality already does, so the attended logits are unchanged.
+    kd = k[tables].reshape(B, -1, KV, hd)
+    vd = v[tables].reshape(B, -1, KV, hd)
+    G = cfg.n_heads // KV
+    if G > 1:
+        kd = jnp.repeat(kd, G, axis=2)
+        vd = jnp.repeat(vd, G, axis=2)
+    out = sdpa(q, kd, vd, causal=True, scale=1.0 / math.sqrt(hd),
+               kv_len=lens + nv, q_offset=lens)
+    y = dense(out.reshape(B, C, cfg.n_heads * cfg.hd), w["wo"])
     return y, {"k": k, "v": v}
 
 

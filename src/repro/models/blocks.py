@@ -35,7 +35,8 @@ from repro.models.layers import cdtype, mlp_apply, norm_apply
 from repro.models.moe import init_moe, moe_apply
 
 __all__ = ["Sig", "layer_sigs", "schedule", "init_layer", "init_layer_cache",
-           "apply_layer", "apply_layer_paged", "init_norm", "init_mlp"]
+           "apply_layer", "apply_layer_paged", "apply_layer_prefill_paged",
+           "init_norm", "init_mlp"]
 
 Sig = Tuple[str, bool]
 
@@ -257,6 +258,37 @@ def apply_layer_paged(cfg: ModelConfig, sig: Sig, w, h: jax.Array,
     x = norm_apply(cfg, w["ln1"], h)
     y, new_cache = attn.attn_decode_paged(cfg, w["mixer"], x, cache,
                                           block_tables, lens)
+    h = hin + y
+    if "ffn" in w:
+        z = norm_apply(cfg, w["ln2"], h)
+        f, _ = _ffn(cfg, sig, w, z)
+        h = h + f
+    return h, new_cache
+
+
+def apply_layer_prefill_paged(cfg: ModelConfig, sig: Sig, w, h: jax.Array,
+                              cache: Dict, block_tables: jax.Array,
+                              lens: jax.Array, n_valid: jax.Array,
+                              aligned: bool = False):
+    """One layer of a continuation-prefill chunk: like
+    :func:`apply_layer_paged` but over a (B, C, D) chunk of prompt
+    tokens instead of a single pending token — the chunk's K/V rows are
+    written into the pool and attention reads the already-written
+    prefix back through the block table.  Returns (h, new_cache).
+    ``aligned`` passes through to :func:`attn.attn_prefill_paged`'s
+    single-block fast write path.  Same paging restriction: plain GQA
+    attention layers only.
+    """
+    mixer, _ = sig
+    if mixer != "attn" or cfg.mla:
+        raise NotImplementedError(
+            f"apply_layer_prefill_paged: only plain GQA attention layers "
+            f"page (got mixer={mixer!r}, mla={bool(cfg.mla)})")
+    hin = h
+    x = norm_apply(cfg, w["ln1"], h)
+    y, new_cache = attn.attn_prefill_paged(cfg, w["mixer"], x, cache,
+                                           block_tables, lens, n_valid,
+                                           aligned=aligned)
     h = hin + y
     if "ffn" in w:
         z = norm_apply(cfg, w["ln2"], h)

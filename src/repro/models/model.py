@@ -23,15 +23,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.blocks import (Sig, apply_layer, apply_layer_paged,
-                                 init_layer, init_layer_cache, init_norm,
-                                 layer_sigs, schedule)
+                                 apply_layer_prefill_paged, init_layer,
+                                 init_layer_cache, init_norm, layer_sigs,
+                                 schedule)
 from repro.models.config import ModelConfig
 from repro.models.layers import cdtype, embed_apply, norm_apply, unembed_apply
 from repro.parallel.api import shard
 
 __all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step",
-           "paged_decode_step", "prefill", "param_logical_axes",
-           "LEARNED_POS_LEN"]
+           "paged_decode_step", "paged_prefill_step", "prefill",
+           "param_logical_axes", "LEARNED_POS_LEN"]
 
 LEARNED_POS_LEN = 32768  # learned-pos table length (whisper decode_32k)
 
@@ -445,4 +446,62 @@ def paged_decode_step(cfg: ModelConfig, params, cache: Dict,
 
     h, new_layers = jax.lax.scan(body, h, (params["layers"], cache["layers"]))
     logits = _logits_out(cfg, params, h)
+    return logits, {"layers0": new0, "layers": new_layers}
+
+
+def paged_prefill_step(cfg: ModelConfig, params, cache: Dict,
+                       tokens: jax.Array, block_tables: jax.Array,
+                       lens: jax.Array, n_valid: jax.Array, *,
+                       aligned: bool = False) -> Tuple[jax.Array, Dict]:
+    """One continuation-prefill chunk over the block-paged cache.
+
+    tokens (B, C) int32 — a fixed-size chunk of each request's uncached
+    prompt suffix, right-padded past ``n_valid``; block_tables (B, NB)
+    and lens (B,) as in :func:`paged_decode_step` (``lens`` = tokens
+    already cached = the chunk's global start position).  Each layer
+    scatters the chunk's K/V into the pool and attends back through the
+    block table, so a chunk sees both earlier chunks of its own prompt
+    AND any prefix blocks *shared* with other requests.  Returns the
+    logits at each request's last valid chunk row (B, 1, V) — only
+    meaningful for the final chunk, where that row is the last prompt
+    token — plus the updated pool pytree.  Chunking the prompt this way
+    is the incremental-admission path: one fixed compiled shape serves
+    any prompt length, and long prompts interleave with decode ticks
+    instead of stalling them.  ``aligned`` forwards the single-block
+    fast-write promise (B == 1, chunk size divides the page) to the
+    attention layers.
+    """
+    if cfg.pos_embed != "rope":
+        raise NotImplementedError(
+            f"paged_prefill_step: per-request positions need rope "
+            f"(cfg.pos_embed={cfg.pos_embed!r})")
+    first_k, period, n_periods = schedule(cfg)
+    sigs = layer_sigs(cfg)
+    nv = jnp.asarray(n_valid, jnp.int32)
+    h = _embed_in(cfg, params, tokens)
+
+    new0: List = []
+    for i in range(first_k):
+        h, nc = apply_layer_prefill_paged(cfg, sigs[i], params["layers0"][i],
+                                          h, cache["layers0"][i],
+                                          block_tables, lens, nv, aligned)
+        new0.append(nc)
+
+    slot_sigs = [sigs[first_k + s] for s in range(period)]
+
+    def body(h, x):
+        ws, cs = x
+        new_cs = []
+        for s in range(period):
+            h, nc = apply_layer_prefill_paged(cfg, slot_sigs[s], ws[s], h,
+                                              cs[s], block_tables, lens, nv,
+                                              aligned)
+            new_cs.append(nc)
+        return h, tuple(new_cs)
+
+    h, new_layers = jax.lax.scan(body, h, (params["layers"], cache["layers"]))
+    # logits only at the last valid row — sliced before the unembed, like
+    # prefill's last_pos path, so the (B, C, V) tensor is never formed
+    h_last = jnp.take_along_axis(h, (nv - 1)[:, None, None], axis=1)
+    logits = _logits_out(cfg, params, h_last)
     return logits, {"layers0": new0, "layers": new_layers}

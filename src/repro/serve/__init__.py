@@ -3,6 +3,6 @@ continuous-batching engine over the block-paged KV cache."""
 
 from repro.serve.engine import ServeEngine, GenerateResult  # noqa: F401
 from repro.serve.paged_cache import (PagedKVCache,  # noqa: F401
-                                     default_page_size)
+                                     default_page_size, prefix_digests)
 from repro.serve.paged_engine import (PagedServeEngine,  # noqa: F401
                                       Request, RequestResult)

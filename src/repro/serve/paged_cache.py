@@ -1,4 +1,4 @@
-"""Block-paged KV cache: a shared pool of fixed-size KV blocks.
+"""Block-paged KV cache: a shared, reference-counted pool of KV blocks.
 
 Cache layout
 ------------
@@ -16,27 +16,48 @@ idle engine slots point their whole table at it, and their masked
 scatter-writes land there harmlessly — so one compiled decode step can
 run over a fixed-size slot array with any subset active.
 
-The allocator is a host-side free list: :meth:`alloc` hands out blocks
-(``None`` when the pool cannot cover the request — the scheduler's
-admission signal), :meth:`free` returns a retired request's blocks
-immediately.  Device state is only the pool pytree itself
-(:attr:`pools`), shaped exactly like ``repro.models.init_cache`` so
-``paged_decode_step``'s scan consumes it directly.
+Block sharing (copy-on-write)
+-----------------------------
+Blocks carry reference counts, so several requests may name the same
+physical block in their tables.  A *prefix index* maps a chained
+content hash of each page-aligned token run (``sha1(parent_digest ||
+page_tokens)``, vLLM-style) to the block holding its K/V: a new request
+whose prompt starts with an already-cached prefix takes the matching
+blocks for free — :meth:`match_prefix` + :meth:`acquire` are pure
+host-side bookkeeping, no prefill compute.
+
+Freeing a *registered* block (one the index knows) does not scrub it:
+at refcount zero it parks on a revival list, still matchable, and is
+only evicted — deregistered and handed out as writable — when the
+allocator runs out of never-written blocks (oldest-parked first, and
+only ever at refcount zero).  :meth:`fork` is the copy-on-write escape
+hatch: give a writer its own copy of a shared block.  The serve engine
+never needs it in steady state — prefix matches are capped so writes
+land past every shared page — but the cache keeps the operation (and
+its tests) so the invariant is enforceable, not incidental.
+
+The free structures are O(1) end to end: a fresh-block stack, an
+insertion-ordered dict for parked revivable blocks (O(1) membership,
+removal, and oldest-first eviction), and refcounts make the
+double-free check a single array lookup instead of the old free-list
+scan.
 """
 
 from __future__ import annotations
 
+import hashlib
 from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.plan import plan_for
 from repro.models.blocks import layer_sigs, schedule
 from repro.models.config import ModelConfig
 from repro.models.layers import cdtype
 
-__all__ = ["PagedKVCache", "default_page_size"]
+__all__ = ["PagedKVCache", "default_page_size", "prefix_digests"]
 
 #: T the page-size probe plans for: the planner cap, so the chosen page
 #: is the largest aligned block the device's VMEM budget admits.
@@ -60,8 +81,25 @@ def default_page_size(cfg: ModelConfig, device=None, *,
     return plan.blocks["block_kv"]
 
 
+def prefix_digests(tokens: np.ndarray, page: int) -> List[bytes]:
+    """Chained content hashes of ``tokens``' full pages.
+
+    ``digest[i] = sha1(digest[i-1] || tokens[i*page:(i+1)*page])`` — the
+    chain means a digest identifies the whole prefix up to and including
+    its page, so equal digests imply bitwise-equal cache contents (K/V
+    of a causal model depend only on the tokens at and before a row).
+    """
+    toks = np.asarray(tokens, np.int32).reshape(-1)
+    out: List[bytes] = []
+    h = b""
+    for i in range(toks.shape[0] // page):
+        h = hashlib.sha1(h + toks[i * page:(i + 1) * page].tobytes()).digest()
+        out.append(h)
+    return out
+
+
 class PagedKVCache:
-    """Pool pytree + free-list allocator for one model's KV blocks.
+    """Pool pytree + refcounting allocator for one model's KV blocks.
 
     ``n_blocks`` counts physical blocks *including* the reserved null
     block 0, so ``n_blocks - 1`` are allocatable.  ``page=None`` asks
@@ -97,7 +135,14 @@ class PagedKVCache:
         self.page = int(page)
         self.n_blocks = int(n_blocks)
         self.pools = self._init_pools(cfg)
-        self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
+        self._refs: List[int] = [0] * self.n_blocks
+        # LIFO stack of never-registered writable blocks
+        self._fresh: List[int] = list(range(self.n_blocks - 1, 0, -1))
+        # refcount-0 blocks still in the prefix index, oldest-parked
+        # first (dict preserves insertion order: O(1) park/revive/evict)
+        self._parked: Dict[int, None] = {}
+        self._index: Dict[bytes, int] = {}      # digest -> block
+        self._digest: Dict[int, bytes] = {}     # block  -> digest
 
     def _init_pools(self, cfg: ModelConfig) -> Dict:
         dt = cdtype(cfg)
@@ -124,30 +169,145 @@ class PagedKVCache:
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        return len(self._fresh) + len(self._parked)
 
     @property
     def used_blocks(self) -> int:
-        return self.capacity - len(self._free)
+        return self.capacity - self.free_blocks
+
+    @property
+    def cached_blocks(self) -> int:
+        """Refcount-0 blocks parked in the prefix index (revivable)."""
+        return len(self._parked)
 
     def occupancy(self) -> float:
         """Fraction of allocatable blocks currently held by requests."""
         return self.used_blocks / max(1, self.capacity)
 
+    def ref_count(self, b: int) -> int:
+        return self._refs[b]
+
+    def _check_range(self, b: int, op: str) -> None:
+        if not 1 <= b < self.n_blocks:
+            raise ValueError(f"{op}: block id {b} outside the "
+                             f"allocatable range [1, {self.n_blocks})")
+
+    def _deregister(self, b: int) -> None:
+        d = self._digest.pop(b, None)
+        if d is not None:
+            del self._index[d]
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Claim ``n`` blocks, or ``None`` if the pool cannot cover them
-        (the all-or-nothing contract keeps admission atomic)."""
-        if n > len(self._free):
+        """Claim ``n`` writable blocks at refcount 1, or ``None`` if the
+        pool cannot cover them (all-or-nothing keeps admission atomic).
+        Never-written blocks go first; then parked index entries are
+        evicted oldest-first (deregistered — only refcount-0 blocks are
+        ever reclaimed, so no live request ever loses a block)."""
+        if n > self.free_blocks:
             return None
-        ids = [self._free.pop() for _ in range(n)]
+        ids: List[int] = []
+        for _ in range(n):
+            if self._fresh:
+                b = self._fresh.pop()
+            else:
+                b = next(iter(self._parked))
+                del self._parked[b]
+                self._deregister(b)
+            self._refs[b] = 1
+            ids.append(b)
         return ids
 
     def free(self, ids: Sequence[int]) -> None:
-        """Return a retired request's blocks to the free list."""
+        """Drop one reference per listed block.  At refcount 0 a block
+        returns to the fresh stack, or — if the prefix index knows it —
+        parks for revival.  Raises before touching anything if any id is
+        out of range or would go below zero (double free)."""
+        counts: Dict[int, int] = {}
         for b in ids:
-            if not 1 <= b < self.n_blocks:
-                raise ValueError(f"free: block id {b} outside the "
-                                 f"allocatable range [1, {self.n_blocks})")
-            if b in self._free:
+            self._check_range(b, "free")
+            counts[b] = counts.get(b, 0) + 1
+        for b, c in counts.items():
+            if self._refs[b] < c:
                 raise ValueError(f"free: block {b} double-freed")
-        self._free.extend(ids)
+        for b, c in counts.items():
+            self._refs[b] -= c
+            if self._refs[b] == 0:
+                if b in self._digest:
+                    self._parked[b] = None
+                else:
+                    self._fresh.append(b)
+
+    def acquire(self, ids: Sequence[int]) -> None:
+        """Add one reference per listed block (a prefix-cache hit taking
+        shared ownership).  Parked blocks revive; a block that is neither
+        live nor parked is not acquirable — that would hand out a fresh
+        block without initialising it."""
+        for b in ids:
+            self._check_range(b, "acquire")
+            if self._refs[b] == 0 and b not in self._parked:
+                raise ValueError(f"acquire: block {b} is not live or "
+                                 "cached (alloc writable blocks instead)")
+        for b in ids:
+            self._parked.pop(b, None)
+            self._refs[b] += 1
+
+    # -- prefix index ------------------------------------------------------
+
+    def match_prefix(self, tokens: np.ndarray) -> List[int]:
+        """Longest run of cached blocks covering ``tokens``' page-aligned
+        prefix.  Pure lookup — call :meth:`acquire` on the result before
+        the next alloc/free, or the blocks may be evicted under you."""
+        out: List[int] = []
+        for d in prefix_digests(tokens, self.page):
+            b = self._index.get(d)
+            if b is None:
+                break
+            out.append(b)
+        return out
+
+    def register_prefix(self, tokens: np.ndarray, ids: Sequence[int]) -> None:
+        """Enter ``tokens``' full pages — held in ``ids`` in order — into
+        the prefix index.  Already-indexed digests are skipped (first
+        writer wins; duplicate content in another block stays private),
+        as are blocks already registered under some digest (a fork)."""
+        ds = prefix_digests(tokens, self.page)
+        if len(ds) > len(ids):
+            raise ValueError(
+                f"register_prefix: {len(ds)} full pages but only "
+                f"{len(ids)} blocks")
+        for d, b in zip(ds, ids):
+            self._check_range(b, "register_prefix")
+            if d in self._index or b in self._digest:
+                continue
+            if self._refs[b] == 0 and b not in self._parked:
+                raise ValueError(f"register_prefix: block {b} is not live")
+            self._index[d] = b
+            self._digest[b] = d
+
+    def fork(self, b: int) -> int:
+        """Copy-on-write: give the caller a private copy of shared block
+        ``b``, moving one of its references onto the copy.  Returns the
+        new block id (unregistered — the forker is about to overwrite
+        it).  The copy is an on-device row copy across every layer pool;
+        the other holders' view of ``b`` is untouched."""
+        self._check_range(b, "fork")
+        if self._refs[b] == 0:
+            raise ValueError(f"fork: block {b} has no references")
+        got = self.alloc(1)
+        if got is None:
+            raise ValueError("fork: pool exhausted (no block for the copy)")
+        dst = got[0]
+
+        def cp(pool):
+            if pool.ndim == 5:          # (n_periods, P, page, KV, hd)
+                return pool.at[:, dst].set(pool[:, b])
+            return pool.at[dst].set(pool[b])
+
+        self.pools = jax.tree.map(cp, self.pools)
+        self._refs[b] -= 1
+        if self._refs[b] == 0:
+            if b in self._digest:
+                self._parked[b] = None
+            else:
+                self._fresh.append(b)
+        return dst

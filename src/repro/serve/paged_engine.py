@@ -2,33 +2,59 @@
 
 Scheduler states (per request)::
 
-    PENDING --admit--> ACTIVE --retire--> DONE
-      (waits for a slot  (holds a slot +     (blocks back on the
-       + enough blocks)   reserved blocks)    free list immediately)
+    PENDING --admit--> PREFILLING --complete--> ACTIVE --retire--> DONE
+      (waits for a slot  (one prompt chunk        (decodes one
+       + enough blocks)   per tick)                token per tick)
 
 Each scheduler *tick*:
 
 1. **retire** — requests that emitted their last token free their slot
-   and return their blocks to the pool;
-2. **admit** — pending requests (arrival <= tick, FIFO) claim a free
-   engine slot and an atomic upfront reservation of
-   ``ceil((prompt + n_steps) / page)`` blocks, prefill their prompt
-   (right-padded to a page multiple; ``last_pos`` slices the true last
-   token's logits) straight into the reserved blocks, and emit their
-   first token.  When the pool or the slot array is exhausted the queue
-   simply waits — admission is the backpressure point;
-3. **decode** — ONE jitted :func:`repro.models.paged_decode_step` call
-   advances every active slot simultaneously: each slot's pending token
+   and release their blocks (shared blocks just drop a reference);
+2. **admit / match prefix** — pending requests (arrival <= tick, FIFO)
+   claim a free engine slot and their block reservation.  With
+   ``prefix_cache`` on, the longest page-aligned cached prefix is taken
+   straight from the pool (:meth:`PagedKVCache.match_prefix` +
+   ``acquire`` — refcount bumps, zero prefill compute) and only the
+   remaining ``ceil(need) - matched`` blocks are allocated writable.
+   The match is capped at ``(s - 1) // page`` pages so at least one
+   prompt token always runs through prefill (the first output token's
+   logits must be computed) — which also guarantees every scatter-write
+   (chunk prefill at positions >= filled, decode at positions >= s)
+   lands past the shared pages, so sharing never needs a
+   :meth:`~PagedKVCache.fork` in steady state.  When the pool or the
+   slot array is exhausted the queue waits — admission is the
+   backpressure point (a matched-then-starved request releases its
+   matched blocks before waiting);
+3. **prefill one chunk** — every PREFILLING slot advances by one
+   ``prefill_chunk``-token chunk through a single fixed-shape jitted
+   :func:`repro.models.paged_prefill_step` call: the chunk's K/V
+   scatter into the slot's blocks, attention reads the already-written
+   prefix (shared or own) back through the block table, and completed
+   full pages register in the prefix index as they land.  On the final
+   chunk the request emits its first token and turns ACTIVE.  Long
+   prompts therefore cost ``ceil(s / chunk)`` bounded ticks instead of
+   one monolithic prompt-length prefill stall — decode ticks interleave
+   below;
+4. **decode** — ONE jitted :func:`repro.models.paged_decode_step` call
+   advances every ACTIVE slot simultaneously: each slot's pending token
    is written at its own cache offset (``lens``), attention reads
-   through the block table, and the next token is sampled.  Idle slots
-   ride along pointing at the null block, so arrivals and retirements
-   never change the compiled shapes — no recompilation mid-flight.
+   through the block table, and the next token is sampled.  Idle and
+   still-PREFILLING slots ride along pointing at the null block with
+   length 0, so arrivals, chunk progress and retirements never change
+   the compiled shapes — no recompilation mid-flight.
 
 The old synchronous :class:`~repro.serve.engine.ServeEngine` pads every
 request to a (batch, max_len) bucket and decodes the whole batch for the
 longest request's step count; this engine keeps the same per-token math
 (greedy decode is bit-identical on the same prompts — the parity oracle
 ``tests/test_serve_paged.py`` pins) while slot-filling ragged work.
+Bitwise parity holds because every attention contraction — sync padded
+prefill, chunk prefill, both decodes — runs at the same aligned KV
+length (``max_len`` = the gathered table width): XLA:CPU's blocked
+reductions round identically when T is aligned, but a *ragged* T (an
+exact-length prompt) orders the tail sum differently and near-tie
+argmaxes flip.  The oracle therefore prefills with
+``ServeEngine(prefill_pad=True)`` in the long-prompt parity tests.
 
 Temperature sampling uses per-request key streams
 (``fold_in(PRNGKey(seed), request_index)``, split once per sampled
@@ -38,6 +64,7 @@ synchronous engine's single key sequence with.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 import time
@@ -48,7 +75,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.model import paged_decode_step, prefill
+from repro.models.model import paged_decode_step, paged_prefill_step
 from repro.serve.paged_cache import PagedKVCache, default_page_size
 
 __all__ = ["PagedServeEngine", "Request", "RequestResult"]
@@ -72,34 +99,44 @@ class RequestResult:
     admitted: int                   # tick it was admitted
     finished: int                   # tick its last token was emitted
     emit_times: List[float]         # perf_counter() per emitted token
+    admit_time: float = 0.0         # perf_counter() at admission (TTFT base)
+    prefix_blocks: int = 0          # pages taken from the prefix cache
 
 
 @dataclasses.dataclass
 class _Slot:
     req: int                        # index into the request list
-    ids: List[int]                  # reserved pool blocks
+    ids: List[int]                  # reserved pool blocks (shared first)
     remaining: int
     key: jax.Array                  # per-request sampling key stream
+    filled: int                     # prompt tokens already in the pool
+    registered: int                 # full pages entered in the prefix index
 
 
 class PagedServeEngine:
-    """Continuous-batching engine: one compiled decode step, ``max_batch``
-    slots, a :class:`PagedKVCache` pool shared by all in-flight requests.
+    """Continuous-batching engine: one compiled decode step, one compiled
+    chunk-prefill step, ``max_batch`` slots, a :class:`PagedKVCache` pool
+    shared by all in-flight requests.
 
     ``n_blocks=None`` sizes the pool so every slot can hold a full
     ``max_len`` request (plus the null block) — pass something smaller
-    to exercise admission backpressure.
-    """
+    to exercise admission backpressure.  ``prefix_cache=False`` disables
+    block sharing (every request allocates and prefills everything —
+    the A/B baseline the benchmark compares against);
+    ``prefill_chunk`` is the incremental-prefill granularity."""
 
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
                  max_batch: int = 8, n_blocks: Optional[int] = None,
-                 page: Optional[int] = None, device=None):
+                 page: Optional[int] = None, device=None,
+                 prefix_cache: bool = True, prefill_chunk: int = 32):
         if page is None:
             # cap the planner's block at max_len: an uncapped probe hands
             # back the largest VMEM-admissible page (512 on every current
             # device), and short-request engines would then gather, mask
             # and convert 4x more pool rows per tick than they can use
             page = default_page_size(cfg, device, cap=max_len)
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk={prefill_chunk} < 1")
         self.page = int(page)
         self.nb_table = math.ceil(max_len / self.page)
         if n_blocks is None:
@@ -108,8 +145,11 @@ class PagedServeEngine:
         self.params = params
         self.max_len = max_len
         self.max_batch = max_batch
+        self.prefix_cache = prefix_cache
+        self.prefill_chunk = int(prefill_chunk)
         self.cache = PagedKVCache(cfg, n_blocks=n_blocks, page=self.page,
                                   device=device)
+
         def _step(p, c, t, tbl, ln):
             # greedy tokens computed in-graph: the scheduler's hot loop
             # transfers (B,) ints per tick, not (B, V) logits + eager ops
@@ -117,48 +157,29 @@ class PagedServeEngine:
             toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             return logits, toks, new_c
 
-        self._decode = jax.jit(_step)
-        self._prefills: Dict[int, object] = {}
-        self._writers: Dict[int, object] = {}
+        # the pool pytree is donated: run() threads one live pools value
+        # through every dispatch and never reads a superseded one, so XLA
+        # updates the blocks in place instead of copying the whole pool
+        # (MBs per tick) to preserve an input nobody looks at again
+        self._decode = jax.jit(_step, donate_argnums=(1,))
 
-    # -- compiled pieces (cached per padded-length / block-count) ----------
+        # chunks start at multiples of prefill_chunk past a page boundary
+        # (prefix matches are page-aligned), so when the chunk size
+        # divides the page no chunk ever crosses a block boundary and the
+        # pool write collapses to one contiguous slice (aligned=True)
+        aligned = self.page % self.prefill_chunk == 0
 
-    #: prompts prefill at this granularity, not the page: a 6-token chat
-    #: turn costs a 32-row prefill, and the writer zero-pads rows up to
-    #: the page before scattering (padded rows sit past ``lens``, so the
-    #: kv_len mask never reads them)
-    _PREFILL_BUCKET = 32
+        def _pstep(p, c, t, tbl, ln, nv):
+            logits, new_c = paged_prefill_step(cfg, p, c, t, tbl, ln, nv,
+                                               aligned=aligned)
+            toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return logits, toks, new_c
 
-    def _prefill_fn(self, sp: int):
-        if sp not in self._prefills:
-            cfg = self.cfg
-            self._prefills[sp] = jax.jit(
-                lambda p, b, lp: prefill(cfg, p, b, max_len=sp, last_pos=lp))
-        return self._prefills[sp]
-
-    def _writer_fn(self, sp: int, nb: int):
-        """Scatter a prefilled (1, sp, ...) cache into ``nb`` pool blocks,
-        zero-padding the ragged tail rows up to the page boundary."""
-        if (sp, nb) not in self._writers:
-            page = self.page
-            rows = nb * page
-
-            def write(pools, pcache, ids):
-                def wr(pool, blk):
-                    # row axis: (.., B=1, sp, KV, hd) -> third from the end
-                    pad = [(0, 0)] * blk.ndim
-                    pad[blk.ndim - 3] = (0, rows - sp)
-                    blk = jnp.pad(blk, pad)
-                    if pool.ndim == 5:      # (n_periods, P, page, KV, hd)
-                        b = blk.reshape((pool.shape[0], nb, page)
-                                        + pool.shape[3:])
-                        return pool.at[:, ids].set(b)
-                    b = blk.reshape((nb, page) + pool.shape[2:])
-                    return pool.at[ids].set(b)
-                return jax.tree.map(wr, pools, pcache)
-
-            self._writers[(sp, nb)] = jax.jit(write)
-        return self._writers[(sp, nb)]
+        # ONE compiled prefill: fixed (1, prefill_chunk) tokens against
+        # the full table width, whatever the prompt length — the ragged
+        # final chunk pads and masks via ``nv`` instead of recompiling.
+        # Pools donated for the same in-place reason as _decode.
+        self._prefill = jax.jit(_pstep, donate_argnums=(1,))
 
     def _sample(self, logits: jax.Array, key, temperature: float):
         """logits (V,) -> int token (same math as ServeEngine._sample)."""
@@ -185,7 +206,8 @@ class PagedServeEngine:
             ) -> Tuple[List[RequestResult], Dict]:
         """Serve ``requests`` (Request objects or (prompt, n_steps[,
         arrival]) tuples) to completion.  Returns per-request results in
-        input order plus scheduler stats (ticks, decode steps, occupancy).
+        input order plus scheduler stats (ticks, decode steps, prefill
+        chunks, prefix-cache hit rate, occupancy).
         """
         reqs = [r if isinstance(r, Request) else Request(*r)
                 for r in requests]
@@ -199,24 +221,40 @@ class PagedServeEngine:
                     f"request {i} does not fit: prompt length {s} + n_steps "
                     f"{r.n_steps} = {s + r.n_steps} exceeds this engine's "
                     f"max_len of {self.max_len}")
+            # fail fast instead of deadlocking: an oversized head request
+            # would otherwise sit at the queue head forever waiting for a
+            # reservation the pool can never satisfy
+            need = math.ceil((s + r.n_steps) / self.page)
+            if need > self.cache.capacity:
+                raise ValueError(
+                    f"request {i} needs {need} blocks but the "
+                    f"pool only has {self.cache.capacity}; grow "
+                    "n_blocks or shorten the request")
 
         root = jax.random.PRNGKey(seed)
         results: List[Optional[RequestResult]] = [None] * len(reqs)
         out_tokens: List[List[int]] = [[] for _ in reqs]
         emit_times: List[List[float]] = [[] for _ in reqs]
         admitted_at = [-1] * len(reqs)
-        # FIFO by (arrival, submission order)
-        queue = sorted(range(len(reqs)), key=lambda i: (reqs[i].arrival, i))
+        admit_time = [0.0] * len(reqs)
+        prefix_blocks = [0] * len(reqs)
+        # FIFO by (arrival, submission order); deque: admission pops the
+        # head O(1) instead of the old list.pop(0) O(n) shuffle
+        queue = collections.deque(
+            sorted(range(len(reqs)), key=lambda i: (reqs[i].arrival, i)))
 
         B, NB = self.max_batch, self.nb_table
         slots: List[Optional[_Slot]] = [None] * B
         tables = np.zeros((B, NB), np.int32)          # null block everywhere
-        lens = np.zeros((B,), np.int32)
+        lens = np.zeros((B,), np.int32)               # 0 while prefilling
         pend = np.zeros((B,), np.int32)
         pools = self.cache.pools
 
         tick = 0
         decode_steps = 0
+        prefill_chunks = 0
+        blocks_reused = 0
+        blocks_needed = 0
         occupancy: List[float] = []
 
         def emit(rid: int, tok: int) -> None:
@@ -231,7 +269,8 @@ class PagedServeEngine:
                 tokens=np.asarray(out_tokens[rid], np.int32),
                 prompt_len=reqs[rid].prompt.shape[0],
                 arrival=reqs[rid].arrival, admitted=admitted_at[rid],
-                finished=tick, emit_times=emit_times[rid])
+                finished=tick, emit_times=emit_times[rid],
+                admit_time=admit_time[rid], prefix_blocks=prefix_blocks[rid])
             slots[si] = None
             tables[si] = 0
             lens[si] = 0
@@ -246,53 +285,97 @@ class PagedServeEngine:
                 r = reqs[rid]
                 s = r.prompt.shape[0]
                 need = math.ceil((s + r.n_steps) / self.page)
-                ids = self.cache.alloc(need)
+                matched: List[int] = []
+                if self.prefix_cache:
+                    # cap: >= 1 suffix token must prefill (first-token
+                    # logits), which also keeps every later write past
+                    # the shared pages — see the module docstring
+                    matched = self.cache.match_prefix(
+                        r.prompt)[:(s - 1) // self.page]
+                    self.cache.acquire(matched)
+                ids = self.cache.alloc(need - len(matched))
                 if ids is None:
-                    if not any(sl is not None for sl in slots):
-                        raise ValueError(
-                            f"request {rid} needs {need} blocks but the "
-                            f"pool only has {self.cache.capacity}; grow "
-                            "n_blocks or shorten the request")
-                    break                     # wait for retirements
-                queue.pop(0)
+                    if matched:
+                        self.cache.free(matched)    # drop the hold, wait
+                    break                           # wait for retirements
+                queue.popleft()
                 si = free_slots[0]
-                key = jax.random.fold_in(root, rid)
-                bucket = self._PREFILL_BUCKET
-                sp = bucket * math.ceil(s / bucket)
-                batch = {"tokens": jnp.asarray(
-                    np.pad(r.prompt, (0, sp - s))[None], jnp.int32)}
-                logits, pcache = self._prefill_fn(sp)(
-                    self.params, batch, jnp.int32(s - 1))
-                nb_prompt = math.ceil(s / self.page)
-                pools = self._writer_fn(sp, nb_prompt)(
-                    pools, pcache, jnp.asarray(ids[:nb_prompt], jnp.int32))
-                # same serialization as the decode tick below: don't let
-                # the scatter-write overlap the next dispatch
-                jax.block_until_ready(pools)
-                key, sub = jax.random.split(key)
-                tok = self._sample(logits[0, -1], sub, temperature)
                 admitted_at[rid] = tick
-                slots[si] = _Slot(req=rid, ids=ids, remaining=r.n_steps - 1,
-                                  key=key)
+                admit_time[rid] = time.perf_counter()
+                prefix_blocks[rid] = len(matched)
+                blocks_reused += len(matched)
+                blocks_needed += (s - 1) // self.page
+                slots[si] = _Slot(req=rid, ids=matched + ids,
+                                  remaining=r.n_steps,
+                                  key=jax.random.fold_in(root, rid),
+                                  filled=len(matched) * self.page,
+                                  registered=len(matched))
                 tables[si, :] = 0
-                tables[si, :need] = ids
-                lens[si] = s
-                pend[si] = tok
-                emit(rid, tok)
-                if slots[si].remaining == 0:
-                    retire(si)
+                tables[si, :need] = slots[si].ids
+                lens[si] = 0                        # ACTIVE only after prefill
 
             occupancy.append(self.cache.occupancy())
 
-            active = [i for i, s in enumerate(slots) if s is not None]
+            # prefill: one chunk per PREFILLING slot, then decode below —
+            # long prompts stall a tick by at most one chunk of compute
+            C = self.prefill_chunk
+            for si in range(B):
+                slot = slots[si]
+                if slot is None or lens[si] > 0:
+                    continue
+                r = reqs[slot.req]
+                s = r.prompt.shape[0]
+                pos = slot.filled
+                nv = min(C, s - pos)
+                toks = np.zeros((1, C), np.int32)
+                toks[0, :nv] = r.prompt[pos:pos + nv]
+                # jnp.array (not asarray): don't alias scheduler state the
+                # async dispatch would race with (same rationale as decode)
+                logits, greedy, pools = self._prefill(
+                    self.params, pools, jnp.array(toks),
+                    jnp.array(tables[si:si + 1]),
+                    jnp.array([pos], np.int32), jnp.array([nv], np.int32))
+                jax.block_until_ready((logits, greedy, pools))
+                prefill_chunks += 1
+                slot.filled = pos + nv
+                if self.prefix_cache:
+                    full = slot.filled // self.page
+                    if full > slot.registered:
+                        self.cache.register_prefix(
+                            r.prompt[:full * self.page], slot.ids[:full])
+                        slot.registered = full
+                if slot.filled == s:                # prefill done -> ACTIVE
+                    if temperature <= 0.0:
+                        tok = int(greedy[0])
+                    else:
+                        slot.key, sub = jax.random.split(slot.key)
+                        tok = self._sample(logits[0, -1], sub, temperature)
+                    lens[si] = s
+                    pend[si] = tok
+                    emit(slot.req, tok)
+                    slot.remaining -= 1
+                    if slot.remaining == 0:
+                        retire(si)
+
+            active = [i for i, sl in enumerate(slots)
+                      if sl is not None and lens[i] > 0]
             if active:
                 # jnp.array (not asarray): asarray zero-copies numpy on CPU,
                 # so the async decode would alias these host buffers while
                 # the scheduler keeps mutating them (retire zeroes table
-                # rows, lens advance) — a read/write race on real state
+                # rows, lens advance) — a read/write race on real state.
+                # PREFILLING slots already sit at lens 0 so the decode
+                # masks them like idle slots; their table rows are real
+                # but every read is kv_len-masked and the pend-0 write
+                # lands at row 0 of their first block, which the next
+                # chunk overwrites (positions are absolute).
+                dec_tables = tables.copy()
+                for si in range(B):
+                    if slots[si] is not None and lens[si] == 0:
+                        dec_tables[si] = 0          # scatter to null block
                 logits, greedy, pools = self._decode(
                     self.params, pools, jnp.array(pend[:, None]),
-                    jnp.array(tables), jnp.array(lens))
+                    jnp.array(dec_tables), jnp.array(lens))
                 # materialize the whole tick before dispatching anything
                 # else: overlapping executions on XLA:CPU's shared thunk
                 # thread pool perturb parallel-reduction numerics, and a
@@ -308,8 +391,9 @@ class PagedServeEngine:
                 keys = None
                 if temperature > 0.0:
                     keys = []
+                    active_set = set(active)
                     for si in range(B):
-                        if slots[si] is not None:
+                        if si in active_set:
                             slots[si].key, sub = jax.random.split(
                                 slots[si].key)
                             keys.append(sub)
@@ -325,16 +409,19 @@ class PagedServeEngine:
                     slot.remaining -= 1
                     if slot.remaining == 0:
                         retire(si)
-            elif not queue:
-                break
             tick += 1
 
         self.cache.pools = pools
         stats = {
             "ticks": tick,
             "decode_steps": decode_steps,
+            "prefill_chunks": prefill_chunks,
             "requests": len(reqs),
             "tokens": sum(len(t) for t in out_tokens),
+            "prefix_blocks_reused": blocks_reused,
+            "prefix_blocks_needed": blocks_needed,
+            "prefix_hit_rate": (blocks_reused / blocks_needed
+                                if blocks_needed else 0.0),
             "occupancy_mean": float(np.mean(occupancy)) if occupancy else 0.0,
             "occupancy_max": float(np.max(occupancy)) if occupancy else 0.0,
         }

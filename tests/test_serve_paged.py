@@ -5,6 +5,15 @@ block pool is exhausted, retirement returning blocks to the free list,
 and — the load-bearing one — interleaved prefill/decode producing
 bit-identical greedy tokens vs the synchronous ``ServeEngine`` oracle
 for ragged, staggered-arrival request mixes.
+
+Prefix-cache era additions: refcounted acquire/release round-trips,
+chained-hash prefix match/register/revive/evict, copy-on-write fork
+leaving the shared block bit-identical, chunked continuation prefill
+holding the same bitwise parity on long prompts, and shared-prefix
+traces reusing blocks (nonzero hit rate) without perturbing tokens.
+The long-prompt oracles run ``ServeEngine(prefill_pad=True)``: bitwise
+parity needs every attention contraction at the same aligned KV length
+(ragged exact-length prefill rounds its tail reduction differently).
 """
 
 import jax
@@ -14,7 +23,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import init_params
 from repro.serve import (PagedKVCache, PagedServeEngine, Request,
-                         ServeEngine, default_page_size)
+                         ServeEngine, default_page_size, prefix_digests)
 
 CFG = get_config("qwen2-7b").reduced()
 PARAMS = init_params(CFG, jax.random.PRNGKey(0))
@@ -188,3 +197,205 @@ def test_temperature_seed_control():
         np.testing.assert_array_equal(x.tokens, y.tokens)
     assert any(not np.array_equal(x.tokens, y.tokens)
                for x, y in zip(a, c))
+
+
+# ---------------------------------------------------------------------------
+# Refcounted block sharing: acquire/release, prefix index, COW fork
+# ---------------------------------------------------------------------------
+
+def _toks(n, seed=11):
+    return np.random.default_rng(seed).integers(
+        0, CFG.vocab_size, (n,)).astype(np.int32)
+
+
+def test_cache_refcount_acquire_release_roundtrip():
+    pc = PagedKVCache(CFG, n_blocks=4, page=PAGE)
+    ids = pc.alloc(2)
+    assert all(pc.ref_count(b) == 1 for b in ids)
+    pc.acquire(ids)                              # second holder
+    assert all(pc.ref_count(b) == 2 for b in ids)
+    pc.free(ids)                                 # first holder leaves
+    assert all(pc.ref_count(b) == 1 for b in ids)
+    assert pc.used_blocks == 2                   # still held, not free
+    pc.free(ids)                                 # last holder leaves
+    assert pc.free_blocks == pc.capacity
+    with pytest.raises(ValueError, match="double-freed"):
+        pc.free(ids)
+    with pytest.raises(ValueError, match="not live or cached"):
+        pc.acquire(ids)                          # unwritten blocks: alloc only
+
+
+def test_cache_prefix_match_register_revive():
+    pc = PagedKVCache(CFG, n_blocks=4, page=PAGE)
+    toks = _toks(2 * PAGE + 40)
+    ids = pc.alloc(2)
+    pc.register_prefix(toks, ids)
+    assert pc.match_prefix(toks) == ids          # both full pages indexed
+    assert pc.match_prefix(toks[:PAGE + 5]) == ids[:1]
+    other = _toks(2 * PAGE, seed=99)
+    assert pc.match_prefix(other) == []
+    pc.free(ids)                                 # refcount 0: parked, not lost
+    assert pc.free_blocks == pc.capacity and pc.cached_blocks == 2
+    assert pc.match_prefix(toks) == ids          # still matchable
+    pc.acquire(ids)                              # revival: a cache hit
+    assert pc.cached_blocks == 0
+    assert all(pc.ref_count(b) == 1 for b in ids)
+    pc.free(ids)
+
+
+def test_cache_eviction_only_reclaims_ref0_blocks():
+    pc = PagedKVCache(CFG, n_blocks=4, page=PAGE)   # capacity 3
+    toks_live, toks_dead = _toks(PAGE, seed=1), _toks(PAGE, seed=2)
+    live = pc.alloc(1)
+    pc.register_prefix(toks_live, live)
+    dead = pc.alloc(1)
+    pc.register_prefix(toks_dead, dead)
+    pc.free(dead)                                # parked at refcount 0
+    ids = pc.alloc(2)                            # 1 fresh + must evict `dead`
+    assert dead[0] in ids and live[0] not in ids
+    assert pc.match_prefix(toks_dead) == []      # evicted => deregistered
+    assert pc.match_prefix(toks_live) == live    # live entry untouched
+    assert pc.alloc(1) is None                   # live block is not takeable
+    pc.free(ids)
+    pc.free(live)
+
+
+def test_cache_fork_leaves_shared_block_bit_identical():
+    pc = PagedKVCache(CFG, n_blocks=4, page=PAGE)
+    b = pc.alloc(1)[0]
+
+    def paint(val, blk):
+        def pt(p):
+            return (p.at[:, blk].set(val) if p.ndim == 5
+                    else p.at[blk].set(val))
+        pc.pools = jax.tree.map(pt, pc.pools)
+
+    def rows(blk):
+        return [np.asarray(p[:, blk] if p.ndim == 5 else p[blk])
+                for p in jax.tree.leaves(pc.pools)]
+
+    paint(7.0, b)
+    before = rows(b)
+    pc.acquire([b])                              # two holders share b
+    dst = pc.fork(b)                             # holder 2 goes private
+    assert dst != b
+    assert pc.ref_count(b) == 1 and pc.ref_count(dst) == 1
+    for a, c in zip(rows(dst), before):
+        np.testing.assert_array_equal(a, c)      # copy is bitwise
+    paint(9.0, dst)                              # the forker writes...
+    for a, c in zip(rows(b), before):
+        np.testing.assert_array_equal(a, c)      # ...shared block untouched
+    loose = pc.alloc(1)[0]
+    pc.free([loose])
+    with pytest.raises(ValueError, match="no references"):
+        pc.fork(loose)                           # freed block: nothing to share
+
+
+def test_prefix_digests_chain_over_pages():
+    toks = _toks(3 * PAGE)
+    ds = prefix_digests(toks, PAGE)
+    assert len(ds) == 3 and len(set(ds)) == 3
+    mut = toks.copy()
+    mut[5] += 1                                  # flip a token in page 0
+    ds2 = prefix_digests(mut, PAGE)
+    assert all(a != b for a, b in zip(ds, ds2))  # chain: all suffixes move
+    assert prefix_digests(toks[:PAGE - 1], PAGE) == []
+
+
+# ---------------------------------------------------------------------------
+# Chunked continuation prefill + prefix sharing: long-prompt parity
+# ---------------------------------------------------------------------------
+
+def _long_engine(**kw):
+    kw.setdefault("max_len", 384)
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("page", PAGE)
+    return PagedServeEngine(CFG, PARAMS, **kw)
+
+
+def _oracle():
+    return ServeEngine(CFG, PARAMS, max_len=384, prefill_pad=True)
+
+
+def test_chunked_prefill_long_prompt_parity():
+    """Prompts spanning several pages prefill in 32-token chunks that
+    attend back through the block table; greedy streams must stay
+    bit-identical to the aligned-prefill synchronous oracle."""
+    specs = [(129, 5, 0), (279, 6, 0), (200, 4, 2)]
+    reqs = _requests(specs)
+    eng = _long_engine()
+    results, stats = eng.run(reqs)
+    assert stats["prefill_chunks"] >= sum(-(-s // 32) for s, _, _ in specs)
+    sync = _oracle()
+    for i, (r, req) in enumerate(zip(results, reqs)):
+        ref = sync.generate(req.prompt[None], n_steps=req.n_steps).tokens[0]
+        np.testing.assert_array_equal(
+            ref, r.tokens, err_msg=f"request {i} diverged from the oracle")
+
+
+def test_prefill_chunk_size_invariance():
+    """The chunk size is a scheduling knob, not a numerics knob."""
+    reqs = _requests([(279, 5, 0), (150, 4, 1)])
+    base, _ = _long_engine(prefill_chunk=32).run(reqs)
+    for chunk in (64, 128):
+        got, _ = _long_engine(prefill_chunk=chunk).run(reqs)
+        for a, b in zip(base, got):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def _shared_prefix_reqs(n=4, prefix_len=256, tail=24, steps=5):
+    rng = np.random.default_rng(21)
+    prefix = rng.integers(0, CFG.vocab_size, (prefix_len,)).astype(np.int32)
+    return [Request(prompt=np.concatenate(
+                [prefix, rng.integers(0, CFG.vocab_size, (tail,))
+                 .astype(np.int32)]),
+                    n_steps=steps, arrival=i) for i in range(n)]
+
+
+def test_shared_prefix_parity_and_hit_rate():
+    """Requests sharing a 2-page system prefix: later arrivals take the
+    prefix blocks by refcount bump (zero prefill compute), tokens stay
+    bit-identical to solo oracle runs, and the hit rate is visible in
+    both the stats payload and the per-request results."""
+    reqs = _shared_prefix_reqs()
+    eng = _long_engine()
+    results, stats = eng.run(reqs)
+    assert stats["prefix_blocks_reused"] > 0
+    assert stats["prefix_blocks_needed"] == 2 * len(reqs)
+    assert 0.0 < stats["prefix_hit_rate"] <= 1.0
+    assert results[0].prefix_blocks == 0         # first writer pays
+    assert any(r.prefix_blocks == 2 for r in results[1:])
+    sync = _oracle()
+    for i, (r, req) in enumerate(zip(results, reqs)):
+        ref = sync.generate(req.prompt[None], n_steps=req.n_steps).tokens[0]
+        np.testing.assert_array_equal(
+            ref, r.tokens, err_msg=f"request {i} diverged from the oracle")
+
+
+def test_prefix_cache_off_is_equivalent_but_never_shares():
+    reqs = _shared_prefix_reqs(n=3)
+    on, s_on = _long_engine().run(reqs)
+    off, s_off = _long_engine(prefix_cache=False).run(reqs)
+    assert s_off["prefix_blocks_reused"] == 0
+    assert s_off["prefix_hit_rate"] == 0.0
+    assert s_on["prefix_blocks_reused"] > 0
+    for a, b in zip(on, off):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_ttft_fields_and_prefill_accounting():
+    reqs = _requests([(129, 4, 0)])
+    results, stats = _long_engine().run(reqs)
+    r = results[0]
+    assert r.admit_time > 0.0
+    assert r.emit_times[0] >= r.admit_time       # TTFT = first emit - admit
+    assert stats["prefill_chunks"] == -(-129 // 32)
+
+
+def test_oversized_request_fails_fast_at_validation():
+    """A too-big request must raise up front — not deadlock at the queue
+    head while runnable requests starve behind it."""
+    eng = _engine(max_len=192, max_batch=2, n_blocks=2)   # capacity 1 block
+    ok, huge = _requests([(8, 4, 0), (120, 16, 0)])
+    with pytest.raises(ValueError, match="blocks"):
+        eng.run([ok, huge])
