@@ -8,15 +8,21 @@ Five kernels (``mfma_gemm``, ``moe_gmm``, ``flash_attention``,
 the wrappers resolve plans, interpret mode, and ragged-tail padding
 (``pad=True``).  The model layer routes through ``dispatch``, which
 picks kernel-vs-reference per op and falls back (with a logged reason)
-when the backend or shapes cannot support the kernel.
+when the backend or shapes cannot support the kernel.  On an active
+mesh, catalog entries with a ``logical`` dim->axis contract plan
+against the per-shard shapes and execute under ``shard_map``
+(``ops`` wrappers' ``sharded=True`` path); entries without one keep
+the whole-op reference fallback.
 """
 
-from repro.kernels.dispatch import (Decision, decide, last_decisions,
+from repro.kernels.dispatch import (Decision, decide, decision_scope,
+                                    fallback, last_decisions,
                                     reset_decisions)
 from repro.kernels.plan import (KernelEntry, TilePlan, UnknownKernelError,
                                 get_kernel, list_kernels, plan_for,
                                 register_kernel)
 
 __all__ = ["Decision", "KernelEntry", "TilePlan", "UnknownKernelError",
-           "decide", "get_kernel", "last_decisions", "list_kernels",
-           "plan_for", "register_kernel", "reset_decisions"]
+           "decide", "decision_scope", "fallback", "get_kernel",
+           "last_decisions", "list_kernels", "plan_for", "register_kernel",
+           "reset_decisions"]

@@ -10,37 +10,63 @@ eligible via the ops-layer pad/mask/slice path) and returns a
 :class:`Decision`; anything the kernel path cannot support falls back to
 the reference with a *logged reason* instead of an exception:
 
-* mesh-sharded execution (the kernels are single-device; GSPMD cannot
-  partition a ``pallas_call``) — callers pass ``sharded=True``;
+* mesh-sharded execution of a kernel with no logical-axis contract
+  (``KernelEntry.logical is None``: a bare ``pallas_call`` is
+  single-device and GSPMD cannot partition it) — callers pass
+  ``sharded=True``;
+* a mesh-sharded op whose *local* shard fails the tiling/VMEM contract
+  (the planner rejects the per-shard shapes);
 * shapes/dtypes the planner rejects even with padding (working set over
   the VMEM budget, unsizable dtype);
 * op-specific contract mismatches the caller detects (a custom softmax
   scale, MLA's ``v_head_dim != qk_dim``) — reported via :func:`fallback`.
 
+When ``sharded=True`` and the kernel carries a logical map, dispatch
+resolves the op's *per-shard* shapes through the active mesh
+(``parallel.api.local_shapes``) and plans tiles against those; the ops
+layer then executes the kernel under ``shard_map`` with in/out specs
+derived from the same logical rules, so collectives stay in the
+surrounding XLA program and the ``pallas_call`` only ever sees its shard.
+
 Decisions are recorded per kernel (:func:`last_decisions`) so the parity
 suite can assert the kernel path actually ran rather than silently
-falling back; fall-back reasons are logged once per (kernel, reason) on
-the ``repro.kernels.dispatch`` logger.
+falling back.  The log is *thread-local* and scopable: wrap a trace in
+:func:`decision_scope` to capture exactly the decisions it makes without
+leakage from (or into) surrounding code; fall-back reasons are logged
+once per (kernel, reason) per scope on the ``repro.kernels.dispatch``
+logger.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import logging
-from typing import Dict, Mapping, Optional, Union
+import threading
+from typing import Dict, Iterator, Mapping, Optional, Union
 
 from repro.arch.spec import DeviceSpec
-from repro.kernels.plan import TilePlan, UnknownKernelError, plan_for
+from repro.kernels.plan import (TilePlan, UnknownKernelError, get_kernel,
+                                plan_for)
 
-__all__ = ["Decision", "decide", "fallback", "last_decisions",
-           "reset_decisions"]
+__all__ = ["Decision", "decide", "decision_scope", "fallback",
+           "last_decisions", "reset_decisions"]
 
 log = logging.getLogger(__name__)
 
-#: kernel name -> the most recent Decision (trace-time introspection).
-_DECISIONS: Dict[str, "Decision"] = {}
-#: (kernel, reason) pairs already logged — fallback log lines fire once.
-_LOGGED: set = set()
+
+class _Log(threading.local):
+    """Per-thread decision log (decisions happen at trace time, on the
+    tracing thread — a global dict would interleave concurrent traces)."""
+
+    def __init__(self):
+        #: kernel name -> the most recent Decision.
+        self.decisions: Dict[str, "Decision"] = {}
+        #: (kernel, reason) pairs already logged — log lines fire once.
+        self.logged: set = set()
+
+
+_LOG = _Log()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,14 +77,18 @@ class Decision:
     use_kernel: bool
     reason: str                      # "ok" or why the reference path won
     plan: Optional[TilePlan] = None
+    #: True when the kernel path runs under ``shard_map`` — ``plan`` is
+    #: then the *per-shard* plan and ``local_dims`` the shard's shapes.
+    sharded: bool = False
+    local_dims: Optional[Mapping[str, int]] = None
 
 
 def _record(decision: Decision) -> Decision:
-    _DECISIONS[decision.kernel] = decision
+    _LOG.decisions[decision.kernel] = decision
     if not decision.use_kernel:
         key = (decision.kernel, decision.reason)
-        if key not in _LOGGED:
-            _LOGGED.add(key)
+        if key not in _LOG.logged:
+            _LOG.logged.add(key)
             log.info("dispatch %s -> XLA reference: %s",
                      decision.kernel, decision.reason)
     return decision
@@ -69,23 +99,58 @@ def fallback(kernel: str, reason: str) -> Decision:
     return _record(Decision(kernel=kernel, use_kernel=False, reason=reason))
 
 
+def _decide_sharded(kernel: str, shapes: Mapping[str, int], *,
+                    dtype, device, pad, mesh, axes) -> Decision:
+    from repro.parallel import api as papi
+
+    try:
+        logical = get_kernel(kernel).logical
+    except UnknownKernelError as e:
+        return fallback(kernel, str(e))
+    if logical is None:
+        return fallback(
+            kernel, "mesh-sharded execution: this kernel has no "
+                    "logical-axis contract, so the pallas_call stays "
+                    "single-device (GSPMD cannot partition it)")
+    mesh = mesh if mesh is not None else papi.current_mesh()
+    if mesh is None:
+        return fallback(
+            kernel, "mesh-sharded execution requested without an active "
+                    "mesh (no parallel.api.set_mesh context or mesh=)")
+    try:
+        local = papi.local_shapes(shapes, logical, mesh, axes)
+        plan = plan_for(kernel, local, dtype=dtype, device=device, pad=pad)
+    except (UnknownKernelError, ValueError) as e:
+        return fallback(
+            kernel, f"mesh-sharded local shard fails the tiling/VMEM "
+                    f"contract: {e}")
+    return _record(Decision(kernel=kernel, use_kernel=True, reason="ok",
+                            plan=plan, sharded=True, local_dims=local))
+
+
 def decide(kernel: str, shapes: Mapping[str, int], *,
            dtype="bfloat16",
            device: Union[None, str, DeviceSpec, object] = None,
            pad: bool = True,
-           sharded: bool = False) -> Decision:
+           sharded: bool = False,
+           mesh=None,
+           axes=None) -> Decision:
     """Pick kernel-vs-reference for ``kernel`` at ``shapes``.
 
     Plans tiles with ``pad=True`` so non-quantum-multiple shapes run the
     kernel via the ops-layer pad/mask/slice path; a planning failure
-    (or ``sharded=True``) yields a reference Decision carrying the reason.
-    Shapes are static under ``jax.jit`` tracing, so decisions are made at
-    trace time and cost nothing per step.
+    yields a reference Decision carrying the reason.  With
+    ``sharded=True`` the plan is made against the op's *per-shard* shapes
+    on the active mesh (or ``mesh=``/``axes=`` overrides) and the
+    returned Decision has ``sharded=True`` — the ops wrapper must then be
+    called with ``sharded=True`` so the kernel runs under ``shard_map``.
+    Kernels without a ``KernelEntry.logical`` contract keep the legacy
+    whole-op fallback.  Shapes are static under ``jax.jit`` tracing, so
+    decisions are made at trace time and cost nothing per step.
     """
     if sharded:
-        return fallback(kernel, "mesh-sharded execution: the Pallas "
-                                "kernels are single-device (GSPMD cannot "
-                                "partition a pallas_call)")
+        return _decide_sharded(kernel, shapes, dtype=dtype, device=device,
+                               pad=pad, mesh=mesh, axes=axes)
     try:
         plan = plan_for(kernel, shapes, dtype=dtype, device=device, pad=pad)
     except (UnknownKernelError, ValueError) as e:
@@ -96,9 +161,26 @@ def decide(kernel: str, shapes: Mapping[str, int], *,
 
 def last_decisions() -> Dict[str, Decision]:
     """Most recent Decision per kernel (for tests / introspection)."""
-    return dict(_DECISIONS)
+    return dict(_LOG.decisions)
 
 
 def reset_decisions() -> None:
-    _DECISIONS.clear()
-    _LOGGED.clear()
+    _LOG.decisions.clear()
+    _LOG.logged.clear()
+
+
+@contextlib.contextmanager
+def decision_scope() -> Iterator[Dict[str, Decision]]:
+    """Capture exactly the decisions made inside the ``with`` block.
+
+    Yields the live dict (kernel name -> Decision) that records them; the
+    surrounding log is saved and restored, so scopes neither see nor
+    clobber outer decisions — tests wrap one trace each instead of
+    relying on global ``reset_decisions()`` hygiene.
+    """
+    prev = (_LOG.decisions, _LOG.logged)
+    _LOG.decisions, _LOG.logged = {}, set()
+    try:
+        yield _LOG.decisions
+    finally:
+        _LOG.decisions, _LOG.logged = prev

@@ -21,6 +21,17 @@ On CPU (this container) the kernels execute in interpret mode — the
 kernel body runs in Python per grid step, validating correctness; on a
 real TPU backend the same call sites compile to Mosaic.
 ``interpret=None`` (the default) auto-detects via ``repro.kernels.compat``.
+
+Mesh execution: every wrapper whose catalog entry carries a
+``KernelEntry.logical`` contract accepts ``sharded=True``, which wraps
+the single-device call in ``jax.shard_map`` over the active mesh
+(``parallel.api.set_mesh``).  In/out specs are derived from the same
+logical-axis rules the dispatcher planned against
+(``parallel.api.shard_assignment``), the body re-resolves the tile plan
+on its *local* shapes (always with the pad/mask/slice path, so ragged
+local shards stay eligible), and any resharding collectives GSPMD needs
+to honor the in-specs stay in the surrounding XLA program — the
+``pallas_call`` itself only ever sees one shard.
 """
 
 from __future__ import annotations
@@ -28,14 +39,41 @@ from __future__ import annotations
 from typing import Dict, Mapping, Optional, Tuple
 
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:  # jax < 0.5 (the supported floor)
+    from jax.experimental.shard_map import shard_map as _shard_map
+except ImportError:  # newer jax moved it to the top level
+    from jax import shard_map as _shard_map
 
 from repro.kernels import (compat, decode_attention as _da,
                            flash_attention as _fa, mamba2_ssd as _ssd,
                            mfma_gemm as _gemm, moe_gmm as _gmm)
-from repro.kernels.plan import TilePlan, plan_for
+from repro.kernels.plan import TilePlan, get_kernel, plan_for
+from repro.parallel import api as _papi
 
 __all__ = ["mfma_gemm", "flash_attention", "decode_attention",
            "paged_decode_attention", "mamba2_ssd", "moe_gmm"]
+
+
+def _mesh_assignment(kernel: str, shapes: Mapping[str, int],
+                     plan: Optional[TilePlan]):
+    """(mesh, ShardAssignment) for a ``sharded=True`` wrapper call."""
+    if plan is not None:
+        raise ValueError(
+            f"{kernel}: sharded=True re-resolves the plan per shard; pass "
+            "device= (and block pins) instead of plan=")
+    mesh = _papi.current_mesh()
+    if mesh is None:
+        raise ValueError(
+            f"{kernel}: sharded=True requires an active mesh "
+            "(parallel.api.set_mesh)")
+    logical = get_kernel(kernel).logical
+    if logical is None:
+        raise ValueError(
+            f"{kernel}: no logical-axis contract in the catalog; this "
+            "kernel cannot run under shard_map")
+    return mesh, _papi.shard_assignment(shapes, logical, mesh)
 
 
 def _resolve(kernel: str, plan: Optional[TilePlan],
@@ -99,9 +137,33 @@ def flash_attention(q, k, v, *, causal=True, kv_len=None, device=None,
                     plan: Optional[TilePlan] = None,
                     block_q: Optional[int] = None,
                     block_kv: Optional[int] = None, pad: bool = False,
-                    interpret: Optional[bool] = None):
+                    interpret: Optional[bool] = None, sharded: bool = False):
     B, S, H, hd = q.shape
     T = k.shape[1]
+    if sharded:
+        mesh, asn = _mesh_assignment(
+            "flash_attention",
+            {"B": B, "S": S, "T": T, "H": H, "KV": k.shape[2], "hd": hd},
+            plan)
+        qkv_specs = (asn.spec("B", None, "H", None),
+                     asn.spec("B", None, "KV", None),
+                     asn.spec("B", None, "KV", None))
+
+        def _body(ql, kl, vl, lens=None):
+            return flash_attention(ql, kl, vl, causal=causal, kv_len=lens,
+                                   device=device, block_q=block_q,
+                                   block_kv=block_kv, pad=True,
+                                   interpret=interpret)
+
+        if kv_len is None:
+            fn = _shard_map(_body, mesh=mesh, in_specs=qkv_specs,
+                            out_specs=qkv_specs[0], check_rep=False)
+            return fn(q, k, v)
+        lens = jnp.asarray(kv_len, jnp.int32)
+        len_spec = asn.spec("B") if lens.ndim else P()
+        fn = _shard_map(_body, mesh=mesh, in_specs=qkv_specs + (len_spec,),
+                        out_specs=qkv_specs[0], check_rep=False)
+        return fn(q, k, v, lens)
     plan, blocks = _resolve("flash_attention", plan,
                             {"B": B, "S": S, "T": T, "H": H,
                              "KV": k.shape[2], "hd": hd},
@@ -125,9 +187,29 @@ def flash_attention(q, k, v, *, causal=True, kv_len=None, device=None,
 def decode_attention(q, k, v, kv_len, *, device=None,
                      plan: Optional[TilePlan] = None,
                      block_kv: Optional[int] = None, pad: bool = False,
-                     interpret: Optional[bool] = None):
+                     interpret: Optional[bool] = None, sharded: bool = False):
     B, H, hd = q.shape
     T = k.shape[1]
+    if sharded:
+        mesh, asn = _mesh_assignment(
+            "decode_attention",
+            {"B": B, "T": T, "H": H, "KV": k.shape[2], "hd": hd}, plan)
+        lens = jnp.asarray(kv_len, jnp.int32)
+        if lens.ndim == 0:
+            lens = jnp.broadcast_to(lens, (B,))
+
+        def _body(ql, kl, vl, ll):
+            return decode_attention(ql, kl, vl, ll, device=device,
+                                    block_kv=block_kv, pad=True,
+                                    interpret=interpret)
+
+        fn = _shard_map(_body, mesh=mesh,
+                        in_specs=(asn.spec("B", "H", None),
+                                  asn.spec("B", None, "KV", None),
+                                  asn.spec("B", None, "KV", None),
+                                  asn.spec("B")),
+                        out_specs=asn.spec("B", "H", None), check_rep=False)
+        return fn(q, k, v, lens)
     plan, blocks = _resolve("decode_attention", plan,
                             {"B": B, "T": T, "H": H, "KV": k.shape[2],
                              "hd": hd},
@@ -175,8 +257,28 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, kv_len, *,
 def mamba2_ssd(x, dt, A, Bm, Cm, *, device=None,
                plan: Optional[TilePlan] = None,
                chunk: Optional[int] = None, pad: bool = False,
-               interpret: Optional[bool] = None):
+               interpret: Optional[bool] = None, sharded: bool = False):
     B, S, nh, hd = x.shape
+    if sharded:
+        mesh, asn = _mesh_assignment(
+            "mamba2_ssd",
+            {"B": B, "S": S, "nh": nh, "hd": hd, "ds": Bm.shape[3],
+             "G": Bm.shape[2]}, plan)
+
+        def _body(xl, dtl, Al, Bl, Cl):
+            return mamba2_ssd(xl, dtl, Al, Bl, Cl, device=device,
+                              chunk=chunk, pad=True, interpret=interpret)
+
+        fn = _shard_map(_body, mesh=mesh,
+                        in_specs=(asn.spec("B", None, "nh", None),
+                                  asn.spec("B", None, "nh"),
+                                  asn.spec("nh"),
+                                  asn.spec("B", None, "G", None),
+                                  asn.spec("B", None, "G", None)),
+                        out_specs=(asn.spec("B", None, "nh", None),
+                                   asn.spec("B", "nh", None, None)),
+                        check_rep=False)
+        return fn(x, dt, A, Bm, Cm)
     plan, blocks = _resolve("mamba2_ssd", plan,
                             {"B": B, "S": S, "nh": nh, "hd": hd,
                              "ds": Bm.shape[3]},
@@ -197,9 +299,24 @@ def mamba2_ssd(x, dt, A, Bm, Cm, *, device=None,
 def moe_gmm(x, w, *, device=None, plan: Optional[TilePlan] = None,
             block_m: Optional[int] = None, block_n: Optional[int] = None,
             block_k: Optional[int] = None, pad: bool = False,
-            interpret: Optional[bool] = None):
+            interpret: Optional[bool] = None, sharded: bool = False):
     E, C, K = x.shape
     N = w.shape[2]
+    if sharded:
+        mesh, asn = _mesh_assignment(
+            "moe_gmm", {"E": E, "C": C, "K": K, "N": N}, plan)
+
+        def _body(xl, wl):
+            return moe_gmm(xl, wl, device=device, block_m=block_m,
+                           block_n=block_n, block_k=block_k, pad=True,
+                           interpret=interpret)
+
+        fn = _shard_map(_body, mesh=mesh,
+                        in_specs=(asn.spec("E", None, None),
+                                  asn.spec("E", None, None)),
+                        out_specs=asn.spec("E", None, None),
+                        check_rep=False)
+        return fn(x, w)
     plan, blocks = _resolve("moe_gmm", plan,
                             {"E": E, "C": C, "K": K, "N": N},
                             x.dtype, device,

@@ -446,6 +446,13 @@ class KernelEntry:
     planner: Callable
     block_names: Tuple[str, ...]
     doc: str = ""
+    #: Mesh-eligibility contract: problem dim -> logical axis name
+    #: (``parallel.api`` rules).  Dims sharing a logical axis co-shard;
+    #: dims absent here stay replicated under ``shard_map``.  ``None``
+    #: means the kernel has no sharded execution path and dispatch keeps
+    #: the legacy whole-op fallback on a mesh.  Plain strings only — the
+    #: catalog stays importable without JAX.
+    logical: Optional[Mapping[str, str]] = None
 
     def _resolve(self, target: str):
         mod, attr = target.split(":")
@@ -537,19 +544,22 @@ for _entry in (
         name="moe_gmm", op="repro.kernels.ops:moe_gmm",
         ref="repro.kernels.ref:moe_gmm_ref", planner=_plan_moe_gmm,
         block_names=("block_m", "block_n", "block_k"),
-        doc="grouped per-expert matmul (E, C, K) @ (E, K, N)"),
+        doc="grouped per-expert matmul (E, C, K) @ (E, K, N)",
+        logical={"E": "expert"}),
     KernelEntry(
         name="flash_attention", op="repro.kernels.ops:flash_attention",
         ref="repro.kernels.ref:flash_attention_ref",
         planner=_plan_flash_attention,
         block_names=("block_q", "block_kv"),
-        doc="blockwise online-softmax causal GQA attention"),
+        doc="blockwise online-softmax causal GQA attention",
+        logical={"B": "batch", "H": "heads", "KV": "heads"}),
     KernelEntry(
         name="decode_attention", op="repro.kernels.ops:decode_attention",
         ref="repro.kernels.ref:decode_attention_ref",
         planner=_plan_decode_attention,
         block_names=("block_kv",),
-        doc="flash-decode: one query token vs a long KV cache"),
+        doc="flash-decode: one query token vs a long KV cache",
+        logical={"B": "batch", "H": "heads", "KV": "heads"}),
     KernelEntry(
         name="paged_decode_attention",
         op="repro.kernels.ops:paged_decode_attention",
@@ -561,6 +571,7 @@ for _entry in (
         name="mamba2_ssd", op="repro.kernels.ops:mamba2_ssd",
         ref="repro.kernels.ref:mamba2_ssd_ref", planner=_plan_mamba2_ssd,
         block_names=("chunk",),
-        doc="chunked SSD (Mamba2): quadratic intra-chunk, linear across"),
+        doc="chunked SSD (Mamba2): quadratic intra-chunk, linear across",
+        logical={"B": "batch", "nh": "heads", "G": "heads"}),
 ):
     register_kernel(_entry)

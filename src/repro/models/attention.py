@@ -17,10 +17,14 @@ Memory/sharding design (dry-run-validated on the (16,16) production mesh):
   kernels — ``kernels.flash_attention`` for the train/prefill step and
   ``kernels.decode_attention`` for the single-token KV-cache step —
   padding ragged (non-128-multiple) shapes via the ops-layer
-  pad/mask/slice path.  Anything the kernel contract cannot express
-  (mesh-sharded execution, MLA's ``v_head_dim != qk_dim``, a custom
-  softmax scale, unplannable shapes) falls back to the XLA reference
-  below with a logged reason, so the flag is always safe to set.
+  pad/mask/slice path.  Under an active mesh the dispatcher plans
+  against the *per-shard* shapes (batch/heads shard via the logical-axis
+  rules) and the kernels execute inside ``shard_map``, so
+  ``use_pallas=True`` survives ``launch.mesh`` execution.  Anything the
+  kernel contract cannot express (MLA's ``v_head_dim != qk_dim``, a
+  custom softmax scale, unplannable local shards) falls back to the XLA
+  reference below with a logged reason, so the flag is always safe to
+  set.
 * Query heads are TP-sharded when `n_heads` divides the model axis
   (mistral 32H, internlm2 48H, llama-vision 64H, ...).  When they do not
   (yi 56H, qwen2 28H, whisper 8H), we instead shard the *query sequence*
@@ -205,16 +209,22 @@ def _attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
             dtype=q.dtype, device=device, sharded=sharded)
         if not dec.use_kernel:
             return None
+        # a sharded Decision's plan is per-shard: the shard_map body
+        # re-resolves it on local shapes, so pass device, not plan
         return kops.flash_attention(q, k, v, causal=causal, kv_len=kv_len,
-                                    plan=dec.plan, pad=True)
+                                    plan=None if dec.sharded else dec.plan,
+                                    device=device, pad=True,
+                                    sharded=dec.sharded)
     dec = kdispatch.decide(
         "decode_attention", {"B": B, "T": T, "H": H, "KV": KV, "hd": hd},
         dtype=q.dtype, device=device, sharded=sharded)
     if not dec.use_kernel:
         return None
     kl = jnp.asarray(T, jnp.int32) if kv_len is None else kv_len
-    return kops.decode_attention(q[:, 0], k, v, kl, plan=dec.plan,
-                                 pad=True)[:, None]
+    return kops.decode_attention(q[:, 0], k, v, kl,
+                                 plan=None if dec.sharded else dec.plan,
+                                 device=device, pad=True,
+                                 sharded=dec.sharded)[:, None]
 
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,

@@ -18,7 +18,10 @@ Mixer execution path: the attention/SSD/MoE calls below read
 ``cfg.use_pallas`` — when set, each catalog-backed op dispatches to the
 ``repro.kernels`` Pallas layer (falling back per op, with a logged
 reason, whenever the kernel contract cannot express it).  Nothing at the
-block level changes: the dual path lives inside the mixers.
+block level changes: the dual path lives inside the mixers, and the
+mesh context threads through ``parallel.api.set_mesh``'s trace-time
+thread-local — under an active mesh the mixers plan per-shard and run
+their kernels inside ``shard_map``, so blocks stay mesh-agnostic.
 """
 
 from __future__ import annotations

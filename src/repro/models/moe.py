@@ -22,9 +22,11 @@ Dual execution path: with ``cfg.use_pallas`` the three expert matmuls
 ``repro.kernels.dispatch`` to the ``kernels.moe_gmm`` grouped-GEMM Pallas
 kernel — the batch groups fold into the per-expert row dim, and
 capacity-trimmed (non-128-multiple) C plus ragged D/F pad via the
-ops-layer zero-pad/slice path, which is exact for a GEMM.  Mesh-sharded
-execution or unplannable shapes fall back to the einsum with a logged
-reason.
+ops-layer zero-pad/slice path, which is exact for a GEMM.  On a mesh the
+GMM runs under ``shard_map`` with E sharded over the "expert" axis —
+the dispatch/combine gathers (the EP collectives) stay in the
+surrounding XLA program.  Unplannable (local) shapes fall back to the
+einsum with a logged reason.
 """
 
 from __future__ import annotations
@@ -139,7 +141,9 @@ def _expert_mm(x4: jax.Array, w3: jax.Array, *, use_pallas: bool,
             sharded=current_mesh() is not None)
         if dec.use_kernel:
             xe = x4.transpose(1, 0, 2, 3).reshape(E, B * C, K)
-            y = kops.moe_gmm(xe, w3, plan=dec.plan, pad=True)
+            y = kops.moe_gmm(xe, w3,
+                             plan=None if dec.sharded else dec.plan,
+                             device=device, pad=True, sharded=dec.sharded)
             y = y.reshape(E, B, C, N).transpose(1, 0, 2, 3)
             # the kernel accumulates in f32 but stores in x4.dtype, so
             # (unlike mm's true-f32 output) the bf16 path takes one extra

@@ -9,9 +9,11 @@ why the SSM/hybrid architectures run the long_500k shape.
 Dual execution path: with ``cfg.use_pallas``, :func:`ssd_chunked` routes
 through ``repro.kernels.dispatch`` to the ``kernels.mamba2_ssd`` Pallas
 kernel (the planner picks the chunk — chunked SSD is exact at any chunk
-size — and ragged S is zero-padded with ``dt=0`` identity steps).  A
-carried initial state, mesh-sharded execution, or unplannable shapes
-fall back to the XLA chunked scan below with a logged reason.
+size — and ragged S is zero-padded with ``dt=0`` identity steps).  On a
+mesh the kernel runs under ``shard_map`` with batch/heads sharded per
+the logical-axis rules (the single B/C group broadcasts).  A carried
+initial state or unplannable (local) shapes fall back to the XLA
+chunked scan below with a logged reason.
 
 Shapes: x (B,S,nh,hd); B/C (B,S,G,ds) shared per group; dt (B,S,nh);
 state carry (B,nh,hd,ds).
@@ -107,11 +109,14 @@ def _ssd_kernel_path(x, dt, A, Bm, Cm, h0,
                           "kernel contract (prefill-continuation path)")
         return None
     dec = kdispatch.decide(
-        "mamba2_ssd", {"B": B, "S": S, "nh": nh, "hd": hd, "ds": ds},
+        "mamba2_ssd", {"B": B, "S": S, "nh": nh, "hd": hd, "ds": ds,
+                       "G": Bm.shape[2]},
         dtype=x.dtype, device=device, sharded=current_mesh() is not None)
     if not dec.use_kernel:
         return None
-    return kops.mamba2_ssd(x, dt, A, Bm, Cm, plan=dec.plan, pad=True)
+    return kops.mamba2_ssd(x, dt, A, Bm, Cm,
+                           plan=None if dec.sharded else dec.plan,
+                           device=device, pad=True, sharded=dec.sharded)
 
 
 def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,

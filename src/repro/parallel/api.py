@@ -20,13 +20,14 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["AxisSpec", "DEFAULT_RULES", "set_mesh", "current_mesh",
-           "current_axes", "shard", "logical_to_spec", "named_sharding"]
+           "current_axes", "shard", "logical_to_spec", "named_sharding",
+           "ShardAssignment", "shard_assignment", "local_shapes"]
 
 
 Physical = Tuple[str, ...]
@@ -135,11 +136,15 @@ def logical_to_spec(shape: Sequence[int],
     from the mesh) are dropped — and an axis may be used by only one dim
     (first wins), matching GSPMD validity rules.
     """
+    if len(shape) != len(logical):
+        raise ValueError(
+            "logical_to_spec: shape and logical axis names must have the "
+            f"same rank; got shape={tuple(shape)} (rank {len(shape)}) vs "
+            f"logical={tuple(logical)} (rank {len(logical)})")
     mesh = mesh or current_mesh()
     axes = axes or current_axes()
     if mesh is None:
         return P(*([None] * len(shape)))
-    assert len(shape) == len(logical), (shape, logical)
     used: set = set()
     parts = []
     for dim, name in zip(shape, logical):
@@ -170,3 +175,118 @@ def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
         return x
     spec = logical_to_spec(x.shape, logical, mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Per-shard shape resolution (the shard_map side of the kernel dispatch).
+#
+# ``logical_to_spec`` answers "how does GSPMD lay out *one array*"; the
+# helpers below answer the op-level question the kernel layer needs: given
+# the named dims of a whole op (B, H, KV, ...) and which logical axis each
+# dim belongs to, how many ways does each dim shard on the active mesh, and
+# what does one shard's shape look like?  Dims that share a logical axis
+# (e.g. Q heads and KV heads both on "heads") must shard *together* — a
+# mesh axis is used only if every size>1 dim in the group divides by it, so
+# the grouped ratios (H/KV for GQA, nh/G for SSD) survive partitioning.
+# Size-1 dims in a group are broadcast: they never block the axis and stay
+# size 1 per shard (MQA's single KV head, Mamba-2's single B/C group).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardAssignment:
+    """How an op's named dims land on the mesh.
+
+    ``counts`` maps every dim name to its shard count (1 = replicated);
+    ``axes_of`` maps the sharded dims to the physical mesh axes they use.
+    """
+
+    counts: Mapping[str, int]
+    axes_of: Mapping[str, Physical]
+
+    def spec(self, *dims: Optional[str]) -> P:
+        """PartitionSpec for one array whose axes are the named dims.
+
+        ``None`` marks an array axis that is not an op dim (always
+        replicated).  Kernel wrappers use this to derive shard_map
+        in/out specs from the same assignment the planner used.
+        """
+        parts = []
+        for d in dims:
+            phys = self.axes_of.get(d, ()) if d is not None else ()
+            if not phys:
+                parts.append(None)
+            elif len(phys) == 1:
+                parts.append(phys[0])
+            else:
+                parts.append(tuple(phys))
+        return P(*parts)
+
+    def local(self, shapes: Mapping[str, int]) -> Dict[str, int]:
+        """Per-shard sizes of ``shapes`` under this assignment."""
+        return {d: n // self.counts.get(d, 1) for d, n in shapes.items()}
+
+
+def shard_assignment(shapes: Mapping[str, int],
+                     logical: Mapping[str, Optional[str]],
+                     mesh: Optional[Mesh] = None,
+                     axes: Optional[AxisSpec] = None) -> ShardAssignment:
+    """Assign mesh axes to an op's named dims via logical-axis rules.
+
+    ``shapes`` maps dim name -> global size; ``logical`` maps dim name ->
+    logical axis (dims absent from ``logical`` stay replicated).  Walks
+    logical axes in first-appearance order of ``shapes``; each mesh axis is
+    consumed by at most one logical axis (first wins, mirroring
+    ``logical_to_spec``).  Without an active mesh everything is replicated.
+    """
+    unknown = [d for d in logical if d not in shapes]
+    if unknown:
+        raise ValueError(
+            f"shard_assignment: logical map names dims {unknown} that are "
+            f"not in shapes {sorted(shapes)}")
+    mesh = mesh or current_mesh()
+    axes = axes or current_axes()
+    counts: Dict[str, int] = {d: 1 for d in shapes}
+    axes_of: Dict[str, Physical] = {}
+    if mesh is None:
+        return ShardAssignment(counts, axes_of)
+    used: set = set()
+    seen: set = set()
+    for dim in shapes:
+        name = logical.get(dim)
+        if name is None or name in seen:
+            continue
+        seen.add(name)
+        group = [d for d in shapes if logical.get(d) == name]
+        big = [d for d in group if shapes[d] > 1]
+        if not big:
+            continue
+        assigned = []
+        factor = 1
+        for ax in axes.physical(name):
+            if ax in used or ax not in mesh.shape:
+                continue
+            nf = factor * mesh.shape[ax]
+            if any(shapes[d] % nf != 0 for d in big):
+                continue
+            factor = nf
+            assigned.append(ax)
+        if factor == 1:
+            continue
+        used.update(assigned)
+        for d in big:
+            counts[d] = factor
+            axes_of[d] = tuple(assigned)
+    return ShardAssignment(counts, axes_of)
+
+
+def local_shapes(shapes: Mapping[str, int],
+                 logical: Mapping[str, Optional[str]],
+                 mesh: Optional[Mesh] = None,
+                 axes: Optional[AxisSpec] = None) -> Dict[str, int]:
+    """Map an op's global dim sizes to one shard's sizes on the mesh.
+
+    This is what ``kernels.dispatch`` plans tiles against when an op runs
+    under ``shard_map``: the kernel only ever sees the local block.
+    """
+    return shard_assignment(shapes, logical, mesh, axes).local(shapes)

@@ -248,3 +248,80 @@ def test_aligned_plan_pad_true_is_identity():
     assert padded.blocks == aligned.blocks
     assert padded.dims == dict(SHAPES["mfma_gemm"])
     assert padded.grid == aligned.grid
+
+
+# ---------------------------------------------------------------------------
+# Per-shard planning: the local shapes shard_map hands the kernels.
+# BIG_SHAPES partitioned through each kernel's KernelEntry.logical
+# contract on a production-class (pod-less) 8 x 8 mesh slice must still
+# plan on every registered device — this is exactly what
+# dispatch.decide(sharded=True) does per shard.
+# ---------------------------------------------------------------------------
+
+class _FakeMesh:
+    """Duck-typed mesh (.shape only): planning needs no devices."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+_SHARD_MESH = _FakeMesh({"data": 8, "model": 8})
+
+#: mesh-eligible kernels (KernelEntry.logical is the source of truth).
+_SHARDED_KERNELS = ["decode_attention", "flash_attention", "mamba2_ssd",
+                    "moe_gmm"]
+
+
+def _local_big(kernel):
+    from repro.parallel.api import local_shapes
+    shapes = dict(BIG_SHAPES[kernel])
+    if kernel == "mamba2_ssd":
+        shapes["G"] = 8                      # grouped B/C projections
+    return shapes, local_shapes(shapes, get_kernel(kernel).logical,
+                                _SHARD_MESH)
+
+
+@pytest.mark.parametrize("device", DEVICES)
+@pytest.mark.parametrize("kernel", _SHARDED_KERNELS)
+def test_per_shard_plan_every_device(kernel, device):
+    """Head-sharded attention (H 32->4, KV 8->1), expert-sharded GMM
+    rows (E 16->2) and head-sharded SSD locals plan with MXU-aligned,
+    VMEM-budgeted tiles on every device."""
+    shapes, local = _local_big(kernel)
+    assert local != shapes                   # something actually sharded
+    assert all(shapes[d] % local[d] == 0 for d in shapes)
+    spec = get_device(device)
+    plan = plan_for(kernel, local, dtype="bfloat16", device=device)
+    align = tile_align(spec)
+    for name, block in plan.blocks.items():
+        assert block % (8 if name == "chunk" else align) == 0, plan
+    assert plan.vmem_bytes <= plan.vmem_budget <= spec.vmem_bytes
+    assert all(g >= 1 for g in plan.grid), plan
+
+
+@pytest.mark.parametrize("device", DEVICES)
+def test_sequence_sharded_ssd_chunks_plan(device):
+    """Context-parallel SSD: an S/16 local slice still chunks exactly
+    (chunked SSD is exact at any chunk, so CP shards stay eligible)."""
+    local = dict(BIG_SHAPES["mamba2_ssd"],
+                 S=BIG_SHAPES["mamba2_ssd"]["S"] // 16)
+    plan = plan_for("mamba2_ssd", local, dtype="bfloat16", device=device)
+    chunk = plan.blocks["chunk"]
+    assert chunk <= local["S"] and local["S"] % chunk == 0, plan
+
+
+def test_shard_too_small_to_tile_keeps_fallback_contract():
+    """A local shard below the alignment quantum (pad=False) or over the
+    VMEM budget must surface as a planner ValueError — the raw material
+    of dispatch's mesh-sharded fallback reason."""
+    # 16 rows per expert shard vs the 128 quantum, strict contract
+    with pytest.raises(ValueError, match="C=16"):
+        plan_for("moe_gmm", {"E": 1, "C": 16, "K": 128, "N": 128},
+                 dtype="bfloat16", device=DEVICES[0], pad=False)
+    # even one minimal tile of this head-sharded shard busts 1 KiB VMEM
+    tiny = get_device("tpu_v5e").derive("tpu_shard_vmem",
+                                        vmem_bytes=1 << 10)
+    with pytest.raises(ValueError):
+        plan_for("flash_attention",
+                 {"B": 1, "S": 4096, "T": 4096, "H": 4, "KV": 1,
+                  "hd": 128}, dtype="bfloat16", device=tiny, pad=True)

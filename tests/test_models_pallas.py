@@ -7,9 +7,11 @@ dtype tolerance — including ragged (non-128-multiple) shapes, which run
 the kernel path via ``plan_for(..., pad=True)`` + the ops-layer
 pad/mask/slice plumbing.  ``repro.kernels.dispatch`` decision records are
 asserted so a silent fallback can never masquerade as parity; the
-contract-mismatch cases (MLA's asymmetric head dims, mesh-sharded
-execution) must fall back with a descriptive reason and bit-identical
-reference output.  This is the ``models-pallas`` CI job.
+contract-mismatch cases (MLA's asymmetric head dims, sharded dispatch
+without a mesh or a logical-axis contract) must fall back with a
+descriptive reason and bit-identical reference output.  This is the
+``models-pallas`` CI job; its mesh leg additionally runs
+``test_sharding_pallas.py`` on 8 fake host devices.
 """
 
 import dataclasses
@@ -211,14 +213,27 @@ def test_mla_falls_back_with_reason():
     np.testing.assert_array_equal(np.asarray(y_pal), np.asarray(y_ref))
 
 
-def test_mesh_sharded_falls_back():
-    """Dispatch refuses the kernel path under a mesh (GSPMD cannot
-    partition a pallas_call)."""
+def test_sharded_without_mesh_falls_back():
+    """sharded=True with no active mesh cannot resolve per-shard shapes;
+    the recorded reason keeps the mesh-sharded tag."""
     dec = kdispatch.decide("flash_attention",
                            {"B": 1, "S": 128, "T": 128, "H": 4, "KV": 2,
                             "hd": 32}, sharded=True)
     assert not dec.use_kernel
     assert "mesh-sharded" in dec.reason
+
+
+def test_sharded_without_logical_contract_falls_back():
+    """Kernels without a KernelEntry.logical map keep the legacy
+    whole-op fallback (a bare pallas_call is single-device)."""
+    class _FakeMesh:
+        shape = {"data": 2, "model": 4}
+
+    dec = kdispatch.decide("mfma_gemm", {"M": 512, "N": 512, "K": 512},
+                           sharded=True, mesh=_FakeMesh())
+    assert not dec.use_kernel
+    assert "mesh-sharded" in dec.reason
+    assert "GSPMD cannot partition" in dec.reason
 
 
 def test_unplannable_shape_falls_back_with_planner_reason():
@@ -241,3 +256,18 @@ def test_dispatch_records_are_per_kernel():
     assert not recs["moe_gmm"].use_kernel
     kdispatch.reset_decisions()
     assert kdispatch.last_decisions() == {}
+
+
+def test_decision_scope_isolates_and_restores():
+    """A scope starts empty, captures exactly its own trace's decisions,
+    and restores the surrounding log on exit — so parity assertions
+    can't be polluted by (or pollute) other tests' decisions."""
+    kdispatch.reset_decisions()
+    kdispatch.decide("mfma_gemm", {"M": 128, "N": 128, "K": 128})
+    with kdispatch.decision_scope() as decs:
+        assert decs == {} and kdispatch.last_decisions() == {}
+        kdispatch.fallback("moe_gmm", "inner-scope reason")
+        assert set(decs) == {"moe_gmm"}
+    outer = kdispatch.last_decisions()
+    assert "moe_gmm" not in outer and "mfma_gemm" in outer
+    kdispatch.reset_decisions()
