@@ -1,0 +1,151 @@
+"""CI fleet-planner trajectory: time the capacity-planning hot paths and
+write a ``BENCH_fleet.json`` artifact comparable across runs.
+
+    PYTHONPATH=src python benchmarks/fleet_bench.py [--small]
+        [--out BENCH_fleet.json] [--check-against BENCH_fleet.json]
+        [--threshold 0.3]
+
+Rows (name, us_per_call, derived):
+
+* ``frontier/builtin_grid``   — one :func:`repro.fleet.frontier` call over
+  every built-in scenario x the five catalog devices (the CLI's default
+  workload; the planner must stay interactive);
+* ``frontier/overlay_grid``   — chat x mi300 under an mfma_scale overlay
+  grid (the what-if path through ``perf.sweep``);
+* ``serve_cost/chat_mi300``   — a single scenario-device cell (analytic
+  graph build + two roofline predictions);
+* ``simulate/mixed_trace``    — the host-side scheduler replica on a
+  64-request trace (the calibration inner loop).
+
+``--check-against`` reuses the speed-normalised trend guard from
+``benchmarks/perf_smoke.py`` — the run fails when any row regresses more
+than ``--threshold`` beyond the machine-speed factor.  The derived
+columns double as correctness gates: the build grid must come back fully
+feasible (every scenario plannable on every device) or the bench fails
+regardless of timing.
+"""
+
+import argparse
+import json
+import platform
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+DEVICES = ("mi200", "mi300", "mi300x", "tpu_v5e", "tpu_v5p")
+
+
+def _best_of(fn, repeats):
+    best, out = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out
+
+
+def _mixed_trace(n=64, seed=0):
+    import numpy as np
+
+    from repro.serve.api import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    t = 0
+    for i in range(n):
+        t += int(rng.poisson(1))
+        long = i % 4 == 1
+        s = int(rng.integers(96, 130)) if long else int(rng.integers(6, 48))
+        steps = int(rng.integers(3, 9)) if long else int(rng.integers(4, 16))
+        reqs.append(Request(prompt=rng.integers(0, 512, (s,))
+                            .astype(np.int32), n_steps=steps, arrival=t))
+    return reqs
+
+
+def main(small: bool = False):
+    """Run the grid; returns [(name, us_per_call, derived), ...]."""
+    from repro.arch.overlay import IDENTITY, overlay_grid
+    from repro.fleet import frontier, list_scenarios, serve_cost, \
+        simulate_trace
+
+    repeats = 2 if small else 3
+    rows = []
+
+    us, rep = _best_of(lambda: frontier(list_scenarios(), DEVICES), repeats)
+    feasible = sum(r.feasible for r in rep.rows)
+    if feasible != len(rep.rows):
+        raise SystemExit(f"[fleet_bench] FAIL: only {feasible}/"
+                         f"{len(rep.rows)} frontier cells feasible")
+    rows.append(("frontier/builtin_grid", us,
+                 f"rows={len(rep.rows)} feasible={feasible}"))
+
+    ovs = [IDENTITY] + overlay_grid(mfma_scale=(0.5, 2.0))
+    us, rep = _best_of(lambda: frontier("chat", ("mi300",), overlays=ovs),
+                       repeats)
+    qps = {round(r.max_qps, 3) for r in rep.rows}
+    if len(qps) < 2:
+        raise SystemExit("[fleet_bench] FAIL: overlay grid did not move "
+                         "the frontier")
+    rows.append(("frontier/overlay_grid", us,
+                 f"overlays={len(ovs)} distinct_qps={len(qps)}"))
+
+    us, cost = _best_of(lambda: serve_cost("chat", "mi300"), repeats)
+    rows.append(("serve_cost/chat_mi300", us,
+                 f"tick={cost.decode_tick_s * 1e3:.2f}ms "
+                 f"bound={cost.decode_bound}"))
+
+    trace = _mixed_trace()
+    us, sim = _best_of(lambda: simulate_trace(
+        trace, max_len=160, max_batch=8, page=32, prefill_chunk=32),
+        repeats)
+    rows.append(("simulate/mixed_trace", us,
+                 f"ticks={sim.ticks} decode={sim.decode_steps} "
+                 f"prefill={sim.prefill_chunks}"))
+    return rows
+
+
+def cli() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    ap.add_argument("--small", action="store_true",
+                    help="CI smoke: fewer repeats")
+    ap.add_argument("--check-against", default=None, metavar="BASELINE",
+                    help="fail on >threshold us_per_call regression vs "
+                         "this baseline JSON")
+    ap.add_argument("--threshold", type=float, default=0.3,
+                    help="allowed fractional regression (default 0.3)")
+    args = ap.parse_args()
+
+    rows = main(small=args.small)
+    payload = {
+        "schema": "bench_fleet/v1",
+        "python": platform.python_version(),
+        "results": {"fleet_bench": [
+            {"name": n, "us_per_call": round(float(us), 3), "derived": d}
+            for n, us, d in rows]},
+    }
+    Path(args.out).write_text(json.dumps(payload, indent=1))
+    for n, us, d in rows:
+        print(f"[fleet_bench] {n:28s} {us:10.1f}us  {d}")
+    print(f"[fleet_bench] {len(rows)} rows -> {args.out}")
+
+    if args.check_against:
+        from benchmarks.perf_smoke import check_against
+        baseline = json.loads(Path(args.check_against).read_text())
+        regressions, speed = check_against(payload, baseline,
+                                           args.threshold)
+        if regressions:
+            for (bench, name), base, new in regressions:
+                print(f"[fleet_bench] REGRESSION {bench}/{name}: "
+                      f"{base:.1f}us -> {new:.1f}us "
+                      f"({new / base:.2f}x vs machine-speed factor "
+                      f"{speed:.2f}x)")
+            return 1
+        print(f"[fleet_bench] trend guard OK vs {args.check_against} "
+              f"(machine-speed factor {speed:.2f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(cli())

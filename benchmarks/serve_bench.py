@@ -58,61 +58,8 @@ MAX_BATCH = 8
 SP_MAX_LEN = 384
 SP_PREFIX = 256
 
-
-def make_trace(n_requests, vocab, seed=0):
-    """Ragged request mix: mostly short chat turns, a heavy tail of long
-    generations, Poisson-ish arrivals in scheduler ticks."""
-    rng = np.random.default_rng(seed)
-    reqs = []
-    tick = 0
-    for i in range(n_requests):
-        tick += int(rng.poisson(1))
-        s = int(rng.integers(6, 72))
-        if rng.random() < 0.2:                     # long-tail generations
-            n = int(rng.integers(48, 96))
-        else:
-            n = int(rng.integers(4, 16))
-        n = min(n, MAX_LEN - s)
-        prompt = rng.integers(0, vocab, (s,)).astype(np.int32)
-        reqs.append((prompt, n, tick))
-    return reqs
-
-
-def make_shared_trace(n_requests, vocab, seed=0, prefix_len=SP_PREFIX):
-    """Shared-system-prompt recipe: one fixed ``prefix_len``-token prefix
-    (page-aligned so its pages hash into the prefix index), a short
-    unique tail per request, staggered arrivals."""
-    rng = np.random.default_rng(seed)
-    prefix = rng.integers(0, vocab, (prefix_len,)).astype(np.int32)
-    reqs = []
-    tick = 0
-    for i in range(n_requests):
-        tick += int(rng.poisson(1))
-        tail = rng.integers(0, vocab,
-                            (int(rng.integers(8, 48)),)).astype(np.int32)
-        n = int(rng.integers(6, 20))
-        reqs.append((np.concatenate([prefix, tail]), n, tick))
-    return reqs
-
-
-def make_longprompt_trace(n_requests, vocab, seed=0):
-    """Long-prompt-under-load: every 4th request drags a multi-page
-    prompt through admission while short decode-heavy requests stream —
-    the monolithic-prefill stall lands on *their* token gaps."""
-    rng = np.random.default_rng(seed)
-    reqs = []
-    tick = 0
-    for i in range(n_requests):
-        tick += int(rng.poisson(1))
-        if i % 4 == 1:
-            s = int(rng.integers(200, 340))
-            n = int(rng.integers(4, 10))
-        else:
-            s = int(rng.integers(8, 48))
-            n = int(rng.integers(12, 32))
-        prompt = rng.integers(0, vocab, (s,)).astype(np.int32)
-        reqs.append((prompt, n, tick))
-    return reqs
+# the generators themselves live in the repro.serve.traces registry —
+# the fleet planner replays the same mixes the bench measures
 
 
 def _latency_stats(results, t0):
@@ -143,11 +90,11 @@ _REPEATS = 5       # recorded runs per engine; best wall wins (CI VMs see
 
 def run_continuous(cfg, params, trace, *, max_len=MAX_LEN,
                    max_batch=MAX_BATCH, **engine_kw):
-    from repro.serve import PagedServeEngine, Request
+    from repro.serve import PagedServeEngine
 
     eng = PagedServeEngine(cfg, params, max_len=max_len,
                            max_batch=max_batch, **engine_kw)
-    reqs = [Request(prompt=p, n_steps=n, arrival=a) for p, n, a in trace]
+    reqs = list(trace)                             # typed Request trace
     eng.run(reqs)                                  # warm the jit caches
     wall, t0, results, stats = math.inf, 0.0, None, None
     for _ in range(_REPEATS):
@@ -175,41 +122,31 @@ def run_continuous(cfg, params, trace, *, max_len=MAX_LEN,
 def run_sync(cfg, params, trace):
     from repro.serve import ServeEngine
 
-    batches = [trace[i:i + MAX_BATCH]
-               for i in range(0, len(trace), MAX_BATCH)]
+    groups = [trace[i:i + MAX_BATCH]
+              for i in range(0, len(trace), MAX_BATCH)]
     # bucketed serving must hold padded-prompt + batch-max decode for its
     # worst batch — the padding waste the paged cache removes
-    ml = max(max(len(p) for p, _, _ in b) + max(n for _, n, _ in b)
-             for b in batches)
+    ml = max(max(len(r.prompt) for r in g) + max(r.n_steps for r in g)
+             for g in groups)
     eng = ServeEngine(cfg, params, max_len=32 * math.ceil(ml / 32))
 
-    def replay(record):
-        lats = []
-        t0 = time.perf_counter()
-        for batch in batches:
-            s_max = max(len(p) for p, _, _ in batch)
-            n_max = max(n for _, n, _ in batch)
-            padded = np.stack([np.pad(p, (0, s_max - len(p)))
-                               for p, _, _ in batch])
-            eng.generate(padded, n_steps=n_max, temperature=0.0)
-            if record:
-                # every token of the batch completes at batch end: each
-                # requested token's latency is its share of the batch wall
-                done = time.perf_counter()
-                requested = sum(n for _, n, _ in batch)
-                lats += [(done - t0) / max(1, requested)] * requested
-                t0 = done
-        return lats
-
-    replay(record=False)                           # warm the jit caches
-    wall, lats = math.inf, None
+    eng.run(trace, batch=MAX_BATCH)                # warm the jit caches
+    wall, results, stats = math.inf, None, None
     for _ in range(_REPEATS):
         t0 = time.perf_counter()
-        lats_i = replay(record=True)
+        results_i, stats_i = eng.run(trace, batch=MAX_BATCH)
         wall_i = time.perf_counter() - t0
         if wall_i < wall:
-            wall, lats = wall_i, lats_i
-    tokens = sum(n for _, n, _ in trace)           # requested tokens only
+            wall, results, stats = wall_i, results_i, stats_i
+    # every token of a group completes at group end: each requested
+    # token's latency is its share of the group wall
+    lats = []
+    for gi in range(stats["batches"]):
+        group = [r for r in results if r.admitted == gi]
+        requested = sum(len(r.tokens) for r in group)
+        gwall = max(r.emit_times[-1] for r in group) - group[0].admit_time
+        lats += [gwall / max(1, requested)] * requested
+    tokens = stats["tokens"]                       # requested tokens only
     lats = np.asarray(sorted(lats))
     return {
         "wall_s": round(wall, 4),
@@ -217,8 +154,8 @@ def run_sync(cfg, params, trace):
         "tokens_per_s": round(tokens / wall, 2),
         "p50_token_ms": round(float(np.percentile(lats, 50)) * 1e3, 3),
         "p99_token_ms": round(float(np.percentile(lats, 99)) * 1e3, 3),
-        "batches": len(batches),
-        "decode_steps": sum(max(n for _, n, _ in b) for b in batches),
+        "batches": stats["batches"],
+        "decode_steps": stats["decode_steps"],
     }
 
 
@@ -248,11 +185,12 @@ def main() -> int:
     import jax
     from repro.configs import get_config
     from repro.models import init_params
+    from repro.serve import get_trace
 
     cfg = get_config("qwen2-7b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     n_requests = args.requests or (16 if args.small else 48)
-    trace = make_trace(n_requests, cfg.vocab_size, seed=args.seed)
+    trace = get_trace("base")(n_requests, cfg.vocab_size, seed=args.seed)
 
     sync = run_sync(cfg, params, trace)
     cont = run_continuous(cfg, params, trace)
@@ -260,7 +198,8 @@ def main() -> int:
     cont["speedup_vs_sync"] = speedup
 
     n_shared = max(6, n_requests // 2)
-    shared = make_shared_trace(n_shared, cfg.vocab_size, seed=args.seed)
+    shared = get_trace("shared_prefix")(n_shared, cfg.vocab_size,
+                                        seed=args.seed)
     # page=128 (not the planner's 384 pick at this cap): the 256-token
     # system prompt must span whole pages or nothing hashes into the
     # prefix index and the cached run degenerates to the nocache one
@@ -272,7 +211,7 @@ def main() -> int:
     sp_cached["speedup_vs_nocache"] = sp_speedup
 
     n_long = max(6, n_requests // 2)
-    longp = make_longprompt_trace(n_long, cfg.vocab_size, seed=args.seed)
+    longp = get_trace("long_prompt")(n_long, cfg.vocab_size, seed=args.seed)
     lp_chunked = run_continuous(cfg, params, longp, max_len=SP_MAX_LEN,
                                 max_batch=4, page=128, prefill_chunk=32)
     lp_mono = run_continuous(cfg, params, longp, max_len=SP_MAX_LEN,

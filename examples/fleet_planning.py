@@ -1,0 +1,76 @@
+"""Fleet capacity planning: the paper's "how do MCE optimizations impact
+future systems" question answered at serving-fleet granularity.
+
+Plans every built-in traffic scenario (``chat``, ``long_context``,
+``bursty_batch``) on all five catalog devices, prints the paper-style
+frontier table (devices needed, p99 vs SLO, tokens/s/device, relative
+cost per Mtok), then asks the what-if the overlay machinery exists for:
+what does a 2x-faster (and a 2x-slower) matrix-core engine buy the chat
+fleet on mi300?
+
+    PYTHONPATH=src python examples/fleet_planning.py
+    PYTHONPATH=src python examples/fleet_planning.py --engine mfma
+    PYTHONPATH=src python examples/fleet_planning.py --scenario chat \\
+        --slo-p99-ms 100
+"""
+
+import argparse
+import dataclasses
+
+from repro.arch.overlay import IDENTITY, overlay_grid
+from repro.fleet import frontier, get_scenario, list_scenarios
+
+DEVICES = ("mi200", "mi300", "mi300x", "tpu_v5e", "tpu_v5p")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default=None,
+                    help=f"one of {list_scenarios()} (default: all)")
+    ap.add_argument("--slo-p99-ms", type=float, default=None)
+    ap.add_argument("--engine", default="roofline")
+    args = ap.parse_args()
+
+    names = [args.scenario] if args.scenario else list_scenarios()
+    scns = []
+    for n in names:
+        scn = get_scenario(n)
+        if args.slo_p99_ms is not None:
+            scn = dataclasses.replace(scn, slo=scn.slo.with_p99(
+                args.slo_p99_ms))
+        scns.append(scn)
+
+    print("== Fleet frontier: every scenario on every catalog device ==\n")
+    for scn in scns:
+        print(f"  {scn.describe()}")
+    print()
+    rep = frontier(scns, DEVICES, engine=args.engine)
+    print(rep.table())
+    for scn in scns:
+        best = rep.best(scn.name)
+        if best:
+            print(f"\n{scn.name}: serve on {best.devices_needed}x "
+                  f"{best.device} — {best.tokens_per_s_device:.0f} "
+                  f"tok/s/device at p99 {best.p99_token_ms:.0f}ms "
+                  f"(SLO {best.slo_p99_ms:g}ms), "
+                  f"{best.cost_per_mtok:.2f} $/Mtok relative")
+        else:
+            print(f"\n{scn.name}: no catalog device meets the SLO")
+
+    print("\n== What-if: matrix-core engine scaling on the chat fleet "
+          "(mi300) ==\n")
+    ovs = [IDENTITY] + overlay_grid(mfma_scale=(0.5, 2.0))
+    what_if = frontier("chat", ("mi300",), overlays=ovs,
+                       engine=args.engine)
+    print(what_if.table())
+    base, faster, slower = what_if.rows
+    print(f"\nA 2x-faster MCE (mfma x0.5) moves chat capacity "
+          f"{base.max_qps:.2f} -> {faster.max_qps:.2f} qps/device; "
+          f"a 2x-slower one drops it to {slower.max_qps:.2f}.  Decode "
+          f"stays {base.bound}-bound, so the lever is the prefill side — "
+          "exactly the asymmetry the planner exists to expose.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -18,8 +18,7 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.models import init_params
-from repro.serve.engine import ServeEngine
-from repro.serve.paged_engine import PagedServeEngine, Request
+from repro.serve import PagedServeEngine, Request, ServeEngine
 
 
 def make_requests(rng, vocab, n, max_len):
@@ -63,16 +62,17 @@ def main():
         n_max = max(r.n_steps for r in reqs)
         eng = ServeEngine(cfg, params,
                           max_len=32 * math.ceil((s_max + n_max) / 32))
-        prompts = np.stack([np.pad(r.prompt, (0, s_max - r.prompt.shape[0]))
-                            for r in reqs])
         t0 = time.perf_counter()
-        res = eng.generate(prompts, n_steps=n_max,
-                           temperature=args.temperature)
+        # same run(trace) protocol as the paged engine below — one padded
+        # bucket replay (batch = the whole trace)
+        results, stats = eng.run(reqs, temperature=args.temperature,
+                                 batch=len(reqs))
         dt = time.perf_counter() - t0
         print(f"{len(reqs)} requests, {total} requested tokens, "
-              f"wall={dt:.2f}s -> {total / dt:.1f} tok/s (bucketed)")
-        for i in range(min(3, len(reqs))):
-            print(f"req{i}: {res.tokens[i, :reqs[i].n_steps][:10].tolist()}")
+              f"wall={dt:.2f}s -> {total / dt:.1f} tok/s (bucketed, "
+              f"{stats['decode_steps']} decode steps)")
+        for i, r in enumerate(results[:3]):
+            print(f"req{i}: {r.tokens[:10].tolist()}")
         return
 
     t0 = time.perf_counter()

@@ -153,15 +153,42 @@ def check_spec(name: str) -> list:
     return errs
 
 
+def check_fleet_frontier(names: list) -> list:
+    """Every registered device must yield a finite, feasible capacity
+    frontier for every built-in traffic scenario — a new catalog entry
+    whose bandwidths/peaks make the planner emit zero or infinite QPS
+    is a catalog bug, not a planning result."""
+    import math
+
+    # deferred: pulls the serve layer (jax) unlike the pure spec checks
+    from repro.fleet import frontier, list_scenarios
+
+    errs = []
+    rep = frontier(list_scenarios(), tuple(names))
+    for r in rep.rows:
+        where = f"{r.device}: scenario {r.scenario!r}"
+        if not (math.isfinite(r.decode_tick_ms) and r.decode_tick_ms > 0):
+            errs.append(f"{where} has a non-finite decode tick "
+                        f"({r.decode_tick_ms})")
+        elif not r.feasible:
+            errs.append(f"{where} is infeasible under its SLO "
+                        f"(decode tick {r.decode_tick_ms:.2f}ms vs "
+                        f"p99 target {r.slo_p99_ms:g}ms)")
+        elif not math.isfinite(r.cost_per_mtok):
+            errs.append(f"{where} yields a non-finite cost per token")
+    return errs
+
+
 def main() -> int:
     failures = []
     names = list(list_devices())
     for name in names:
         failures += check_spec(name)
+    failures += check_fleet_frontier(names)
     for f in failures:
         print(f"FAIL {f}")
     print(f"checked {len(names)} device specs "
-          f"({', '.join(names)}): "
+          f"({', '.join(names)}) + fleet frontiers: "
           f"{'OK' if not failures else f'{len(failures)} violations'}")
     return 1 if failures else 0
 

@@ -12,12 +12,26 @@ shape for existing call sites.  New code should use
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Tuple
 
 from repro.core.hlo_bridge import DotOp
 from repro.perf.hlo_ir import parse_module
 
 __all__ = ["HLOStats", "analyze"]
+
+_WARNED = False
+
+
+def _warn_deprecated() -> None:
+    global _WARNED
+    if not _WARNED:
+        _WARNED = True
+        warnings.warn(
+            "repro.core.hlo_analysis.analyze is deprecated; use "
+            "repro.perf.parse_cached (loop-aware KernelGraph) or "
+            "repro.perf.predict instead", DeprecationWarning,
+            stacklevel=3)
 
 
 @dataclasses.dataclass
@@ -39,7 +53,11 @@ class HLOStats:
 
 
 def analyze(text: str, *, tpu_correct: bool = True) -> HLOStats:
-    """Legacy view of :func:`repro.perf.hlo_ir.parse_module`."""
+    """Legacy view of :func:`repro.perf.hlo_ir.parse_module`.
+
+    .. deprecated:: use :func:`repro.perf.parse_cached` instead.
+    """
+    _warn_deprecated()
     g = parse_module(text, tpu_correct=tpu_correct)
     return HLOStats(
         flops=g.flops,

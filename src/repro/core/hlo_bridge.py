@@ -13,6 +13,7 @@ same numbers (``tests/test_perf_engines.py`` asserts engine/legacy parity)
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.machine import MachineModel, as_machine
@@ -33,6 +34,21 @@ _DIMS_RE = hlo_ir.DIMS_RE
 _GROUPS_RE = hlo_ir.GROUPS_RE
 _GROUPS_LIST_RE = hlo_ir.GROUPS_LIST_RE
 _SHAPE_RE = hlo_ir.SHAPE_RE
+
+_WARNED = False
+
+
+def _warn_deprecated() -> None:
+    """One-shot: this surface is kept for parity tests and old notebooks
+    only, and goes away once the fleet layer's consumers are migrated."""
+    global _WARNED
+    if not _WARNED:
+        _WARNED = True
+        warnings.warn(
+            "repro.core.hlo_bridge.predict is deprecated; call "
+            "repro.perf.predict(workload, device=..., engine='mfma') — "
+            "same numbers, one model home", DeprecationWarning,
+            stacklevel=3)
 
 
 def parse_dots(text: str) -> List[DotOp]:
@@ -102,7 +118,10 @@ def predict(machine: MachineModel, hlo_text: str,
     so total matrix FLOPs match the caller's dynamic count (use
     :func:`repro.core.hlo_analysis.analyze` for loop-aware counts — XLA:CPU's
     own ``cost_analysis()`` counts while bodies once).
+
+    .. deprecated:: use :func:`repro.perf.predict` instead.
     """
+    _warn_deprecated()
     machine = as_machine(machine)
     dots = parse_dots(hlo_text)
     parsed_flops = float(sum(d.flops for d in dots))

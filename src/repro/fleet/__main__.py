@@ -1,0 +1,7 @@
+"""Entry point for ``python -m repro.fleet``."""
+
+import sys
+
+from repro.fleet.cli import main
+
+sys.exit(main())

@@ -1,8 +1,12 @@
 """Serving layer: synchronous batched engine (the parity oracle) and the
-continuous-batching engine over the block-paged KV cache."""
+continuous-batching engine over the block-paged KV cache, behind the
+shared typed ``run(trace)`` protocol in :mod:`repro.serve.api`."""
 
+from repro.serve.api import (Request, RequestResult,  # noqa: F401
+                             RunStats, ServeAPI, as_requests)
 from repro.serve.engine import ServeEngine, GenerateResult  # noqa: F401
 from repro.serve.paged_cache import (PagedKVCache,  # noqa: F401
                                      default_page_size, prefix_digests)
-from repro.serve.paged_engine import (PagedServeEngine,  # noqa: F401
-                                      Request, RequestResult)
+from repro.serve.paged_engine import PagedServeEngine  # noqa: F401
+from repro.serve.traces import (get_trace, list_traces,  # noqa: F401
+                                register_trace)

@@ -8,7 +8,8 @@ the decode_32k / long_500k dry-run cells, and example ``serve_demo.py``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +17,7 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.model import decode_step, prefill
+from repro.serve.api import Request, RequestResult, RunStats, as_requests
 
 __all__ = ["ServeEngine", "GenerateResult"]
 
@@ -97,3 +99,57 @@ class ServeEngine:
             tok = self._sample(logits[:, -1], sub, temperature)[:, None]
         return GenerateResult(tokens=np.concatenate(out, axis=1),
                               prompt_len=S, steps=n_steps)
+
+    # -- shared serve protocol (repro.serve.api.ServeAPI) -------------------
+
+    def run(self, requests: Sequence[Union[Request, Tuple]], *,
+            temperature: float = 0.0, seed: int = 0, batch: int = 1
+            ) -> Tuple[List[RequestResult], RunStats]:
+        """Replay a trace synchronously: FIFO groups of up to ``batch``
+        requests, every prompt right-padded to the group max, every
+        request decoded for the group-max step count and sliced to its
+        own ``n_steps`` — the padding/convoy semantics this engine has
+        always had, behind the same ``run(trace)`` protocol the paged
+        engine speaks.
+
+        ``batch=1`` (the default) serves each request solo and is the
+        bit-exact greedy oracle: request *i*'s tokens equal
+        ``generate(prompt[None], n_steps=r.n_steps)``.  Arrival ticks
+        are ignored beyond FIFO order — a synchronous bucket engine has
+        no scheduler clock, so ``admitted``/``finished`` report the
+        group index and every token's emit time is the group's
+        completion time (tokens only materialize at batch end).
+        """
+        if batch < 1:
+            raise ValueError(f"batch={batch} < 1")
+        reqs = as_requests(requests)
+        order = sorted(range(len(reqs)), key=lambda i: (reqs[i].arrival, i))
+        results: List[Optional[RequestResult]] = [None] * len(reqs)
+        decode_steps = 0
+        groups = [order[i:i + batch] for i in range(0, len(order), batch)]
+        for gi, group in enumerate(groups):
+            s_max = max(reqs[i].prompt.shape[0] for i in group)
+            n_max = max(reqs[i].n_steps for i in group)
+            padded = np.stack(
+                [np.pad(reqs[i].prompt,
+                        (0, s_max - reqs[i].prompt.shape[0]))
+                 for i in group])
+            t_admit = time.perf_counter()
+            gen = self.generate(padded, n_steps=n_max,
+                                temperature=temperature, seed=seed)
+            t_done = time.perf_counter()
+            decode_steps += n_max
+            for row, i in enumerate(group):
+                r = reqs[i]
+                results[i] = RequestResult(
+                    tokens=np.asarray(gen.tokens[row, :r.n_steps], np.int32),
+                    prompt_len=r.prompt.shape[0],
+                    arrival=r.arrival, admitted=gi, finished=gi,
+                    emit_times=[t_done] * r.n_steps, admit_time=t_admit)
+        stats = RunStats(
+            requests=len(reqs),
+            tokens=sum(r.n_steps for r in reqs),
+            decode_steps=decode_steps,
+            batches=len(groups),
+        )
+        return [r for r in results if r is not None], stats

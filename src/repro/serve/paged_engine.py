@@ -68,7 +68,7 @@ import collections
 import dataclasses
 import math
 import time
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -76,31 +76,10 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.model import paged_decode_step, paged_prefill_step
+from repro.serve.api import Request, RequestResult, RunStats, as_requests
 from repro.serve.paged_cache import PagedKVCache, default_page_size
 
 __all__ = ["PagedServeEngine", "Request", "RequestResult"]
-
-
-@dataclasses.dataclass
-class Request:
-    """One serve request: ``prompt`` (1-D int32 tokens), ``n_steps``
-    tokens to generate, ``arrival`` tick at which it may be admitted."""
-
-    prompt: np.ndarray
-    n_steps: int
-    arrival: int = 0
-
-
-@dataclasses.dataclass
-class RequestResult:
-    tokens: np.ndarray              # (n_steps,) generated tokens
-    prompt_len: int
-    arrival: int                    # tick the request became eligible
-    admitted: int                   # tick it was admitted
-    finished: int                   # tick its last token was emitted
-    emit_times: List[float]         # perf_counter() per emitted token
-    admit_time: float = 0.0         # perf_counter() at admission (TTFT base)
-    prefix_blocks: int = 0          # pages taken from the prefix cache
 
 
 @dataclasses.dataclass
@@ -203,19 +182,16 @@ class PagedServeEngine:
 
     def run(self, requests: Sequence[Union[Request, Tuple]], *,
             temperature: float = 0.0, seed: int = 0
-            ) -> Tuple[List[RequestResult], Dict]:
-        """Serve ``requests`` (Request objects or (prompt, n_steps[,
-        arrival]) tuples) to completion.  Returns per-request results in
-        input order plus scheduler stats (ticks, decode steps, prefill
-        chunks, prefix-cache hit rate, occupancy).
+            ) -> Tuple[List[RequestResult], RunStats]:
+        """Serve ``requests`` (:class:`repro.serve.Request` objects;
+        legacy (prompt, n_steps[, arrival]) tuples are coerced with a
+        deprecation warning) to completion.  Returns per-request results
+        in input order plus :class:`repro.serve.RunStats` (ticks, decode
+        steps, prefill chunks, prefix-cache hit rate, occupancy).
         """
-        reqs = [r if isinstance(r, Request) else Request(*r)
-                for r in requests]
+        reqs = as_requests(requests)
         for i, r in enumerate(reqs):
-            r.prompt = np.asarray(r.prompt, np.int32).reshape(-1)
             s = r.prompt.shape[0]
-            if r.n_steps < 1:
-                raise ValueError(f"request {i}: n_steps={r.n_steps} < 1")
             if s + r.n_steps > self.max_len:
                 raise ValueError(
                     f"request {i} does not fit: prompt length {s} + n_steps "
@@ -412,19 +388,19 @@ class PagedServeEngine:
             tick += 1
 
         self.cache.pools = pools
-        stats = {
-            "ticks": tick,
-            "decode_steps": decode_steps,
-            "prefill_chunks": prefill_chunks,
-            "requests": len(reqs),
-            "tokens": sum(len(t) for t in out_tokens),
-            "prefix_blocks_reused": blocks_reused,
-            "prefix_blocks_needed": blocks_needed,
-            "prefix_hit_rate": (blocks_reused / blocks_needed
-                                if blocks_needed else 0.0),
-            "occupancy_mean": float(np.mean(occupancy)) if occupancy else 0.0,
-            "occupancy_max": float(np.max(occupancy)) if occupancy else 0.0,
-        }
+        stats = RunStats(
+            requests=len(reqs),
+            tokens=sum(len(t) for t in out_tokens),
+            ticks=tick,
+            decode_steps=decode_steps,
+            prefill_chunks=prefill_chunks,
+            prefix_blocks_reused=blocks_reused,
+            prefix_blocks_needed=blocks_needed,
+            prefix_hit_rate=(blocks_reused / blocks_needed
+                             if blocks_needed else 0.0),
+            occupancy_mean=float(np.mean(occupancy)) if occupancy else 0.0,
+            occupancy_max=float(np.max(occupancy)) if occupancy else 0.0,
+        )
         return [r for r in results if r is not None], stats
 
     def generate(self, tokens: np.ndarray, *, n_steps: int = 32,

@@ -1,0 +1,124 @@
+"""Registry of serve trace generators.
+
+These used to live as module-level helpers in
+``benchmarks/serve_bench.py``; the fleet planner's traffic scenarios
+need to replay the *same* request mixes the bench measures, so the
+generators are promoted here behind a tiny registry and both consumers
+draw from it.  The rng draw order of every generator is kept exactly as
+the bench had it — the committed ``BENCH_serve.json`` trend rows stay
+comparable across the move.
+
+A trace generator has the signature::
+
+    fn(n_requests, vocab, seed=0, **kw) -> List[repro.serve.Request]
+
+Register your own with :func:`register_trace` (see the ROADMAP recipe)::
+
+    @register_trace("my_mix")
+    def make_my_mix(n_requests, vocab, seed=0):
+        ...
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+
+from repro.serve.api import Request
+
+__all__ = ["register_trace", "get_trace", "list_traces",
+           "make_trace", "make_shared_trace", "make_longprompt_trace"]
+
+# defaults shared with benchmarks/serve_bench.py: requests are clamped
+# to a 128-token engine bucket; the shared-prefix recipe fixes a
+# 256-token (2-page) system prompt inside a 384-token bucket
+TRACE_MAX_LEN = 128
+SHARED_PREFIX_LEN = 256
+
+_REGISTRY: Dict[str, Callable[..., List[Request]]] = {}
+
+
+def register_trace(name: str):
+    """Decorator: register a trace generator under ``name``."""
+    def deco(fn: Callable[..., List[Request]]):
+        if name in _REGISTRY:
+            raise ValueError(f"trace {name!r} is already registered")
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_trace(name: str) -> Callable[..., List[Request]]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown trace {name!r}; registered: {list_traces()}") from None
+
+
+def list_traces() -> Sequence[str]:
+    return sorted(_REGISTRY)
+
+
+@register_trace("base")
+def make_trace(n_requests: int, vocab: int, seed: int = 0,
+               max_len: int = TRACE_MAX_LEN) -> List[Request]:
+    """Ragged request mix: mostly short chat turns, a heavy tail of long
+    generations, Poisson-ish arrivals in scheduler ticks."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    tick = 0
+    for i in range(n_requests):
+        tick += int(rng.poisson(1))
+        s = int(rng.integers(6, 72))
+        if rng.random() < 0.2:                     # long-tail generations
+            n = int(rng.integers(48, 96))
+        else:
+            n = int(rng.integers(4, 16))
+        n = min(n, max_len - s)
+        prompt = rng.integers(0, vocab, (s,)).astype(np.int32)
+        reqs.append(Request(prompt=prompt, n_steps=n, arrival=tick))
+    return reqs
+
+
+@register_trace("shared_prefix")
+def make_shared_trace(n_requests: int, vocab: int, seed: int = 0,
+                      prefix_len: int = SHARED_PREFIX_LEN) -> List[Request]:
+    """Shared-system-prompt recipe: one fixed ``prefix_len``-token prefix
+    (page-aligned so its pages hash into the prefix index), a short
+    unique tail per request, staggered arrivals."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, (prefix_len,)).astype(np.int32)
+    reqs = []
+    tick = 0
+    for i in range(n_requests):
+        tick += int(rng.poisson(1))
+        tail = rng.integers(0, vocab,
+                            (int(rng.integers(8, 48)),)).astype(np.int32)
+        n = int(rng.integers(6, 20))
+        reqs.append(Request(prompt=np.concatenate([prefix, tail]),
+                            n_steps=n, arrival=tick))
+    return reqs
+
+
+@register_trace("long_prompt")
+def make_longprompt_trace(n_requests: int, vocab: int,
+                          seed: int = 0) -> List[Request]:
+    """Long-prompt-under-load: every 4th request drags a multi-page
+    prompt through admission while short decode-heavy requests stream —
+    the monolithic-prefill stall lands on *their* token gaps."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    tick = 0
+    for i in range(n_requests):
+        tick += int(rng.poisson(1))
+        if i % 4 == 1:
+            s = int(rng.integers(200, 340))
+            n = int(rng.integers(4, 10))
+        else:
+            s = int(rng.integers(8, 48))
+            n = int(rng.integers(12, 32))
+        prompt = rng.integers(0, vocab, (s,)).astype(np.int32)
+        reqs.append(Request(prompt=prompt, n_steps=n, arrival=tick))
+    return reqs

@@ -9,9 +9,30 @@ import pytest
 from repro.core import hlo_bridge as hb
 from repro.core.machine import get_machine
 
+# the legacy surface under test is deprecated by design (repro.perf is
+# the replacement); the parity suite exercises it on purpose
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:repro.core.hlo_bridge:DeprecationWarning")
+
 
 def _lowered_text(fn, *args):
     return jax.jit(fn).lower(*args).as_text()
+
+
+def test_predict_deprecation_is_one_shot():
+    import warnings
+
+    a = jax.ShapeDtypeStruct((64, 64), jnp.bfloat16)
+    txt = _lowered_text(lambda x, y: x @ y, a, a)
+    hb._WARNED = False                            # arm the one-shot
+    with pytest.warns(DeprecationWarning, match="repro.perf.predict"):
+        hb.predict(get_machine("mi300"), txt)
+    with warnings.catch_warnings():               # second call: silent
+        warnings.simplefilter("error", DeprecationWarning)
+        hb.predict(get_machine("mi300"), txt)
+        # the still-supported explicit-dot-list path never warns
+        hb.predict_dots(get_machine("mi300"),
+                        [(d, 1.0) for d in hb.parse_dots(txt)])
 
 
 def test_parse_dots_stablehlo():

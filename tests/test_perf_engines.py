@@ -19,6 +19,11 @@ from repro.perf.hlo_ir import KernelGraph
 ENGINES = {"roofline": RooflineEngine, "mfma": MfmaAnalyticEngine,
            "scoreboard": ScoreboardEngine}
 
+# the engine/legacy parity tests call deprecated hlo_bridge.predict on
+# purpose — exact-equality is the contract that lets it be deleted later
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:repro.core.hlo_bridge:DeprecationWarning")
+
 # overlay scenarios the parity sweep covers (no table patches: those would
 # bolt a cycle table onto MXU devices)
 OVERLAYS = [IDENTITY, Overlay(mfma_scale=2.0),

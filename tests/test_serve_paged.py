@@ -16,6 +16,8 @@ parity needs every attention contraction at the same aligned KV length
 (ragged exact-length prefill rounds its tail reduction differently).
 """
 
+import warnings
+
 import jax
 import numpy as np
 import pytest
@@ -23,7 +25,8 @@ import pytest
 from repro.configs import get_config
 from repro.models import init_params
 from repro.serve import (PagedKVCache, PagedServeEngine, Request,
-                         ServeEngine, default_page_size, prefix_digests)
+                         RunStats, ServeEngine, default_page_size,
+                         prefix_digests)
 
 CFG = get_config("qwen2-7b").reduced()
 PARAMS = init_params(CFG, jax.random.PRNGKey(0))
@@ -399,3 +402,79 @@ def test_oversized_request_fails_fast_at_validation():
     ok, huge = _requests([(8, 4, 0), (120, 16, 0)])
     with pytest.raises(ValueError, match="blocks"):
         eng.run([ok, huge])
+
+
+# ---------------------------------------------------------------------------
+# Typed serve API: shared run(trace) protocol, RunStats, tuple shim
+# ---------------------------------------------------------------------------
+
+def test_run_protocol_parity_across_engines():
+    """Both engines serve the same typed trace through the shared
+    ``run(trace)`` protocol; the synchronous engine in its batch=1
+    oracle mode must match the paged engine's greedy streams token for
+    token, and both hand back a RunStats."""
+    reqs = _requests([(5, 6, 0), (17, 9, 1), (12, 4, 2)])
+    paged_res, paged_stats = _engine(max_batch=2, n_blocks=3).run(reqs)
+    sync_res, sync_stats = ServeEngine(CFG, PARAMS, max_len=64).run(reqs)
+    assert isinstance(paged_stats, RunStats)
+    assert isinstance(sync_stats, RunStats)
+    assert sync_stats["tokens"] == paged_stats["tokens"]
+    assert sync_stats["batches"] == len(reqs)     # solo oracle groups
+    for i, (a, b) in enumerate(zip(paged_res, sync_res)):
+        np.testing.assert_array_equal(
+            a.tokens, b.tokens,
+            err_msg=f"request {i}: run() protocol engines diverged")
+        assert a.prompt_len == b.prompt_len
+        assert len(b.emit_times) == len(b.tokens)
+
+
+def test_sync_run_batched_matches_generate_slices():
+    """batch>1 replay is the padded-bucket semantics run_sync always had:
+    group max steps, per-request slice."""
+    reqs = _requests([(6, 4, 0), (11, 7, 0), (9, 3, 1)])
+    eng = ServeEngine(CFG, PARAMS, max_len=64)
+    results, stats = eng.run(reqs, batch=3)
+    assert stats["batches"] == 1 and stats["decode_steps"] == 7
+    s_max = max(r.prompt.shape[0] for r in reqs)
+    padded = np.stack([np.pad(r.prompt, (0, s_max - r.prompt.shape[0]))
+                       for r in reqs])
+    ref = eng.generate(padded, n_steps=7).tokens
+    for i, r in enumerate(results):
+        np.testing.assert_array_equal(ref[i, :reqs[i].n_steps], r.tokens)
+
+
+def test_tuple_trace_shim_warns_once_and_matches_typed():
+    """Legacy (prompt, n_steps, arrival) tuples still run — coerced with
+    a one-shot DeprecationWarning — and produce the same tokens as the
+    typed trace."""
+    import repro.serve.api as api
+    reqs = _requests([(6, 4, 0), (9, 3, 1)])
+    tuples = [(r.prompt.copy(), r.n_steps, r.arrival) for r in reqs]
+    eng = _engine(max_batch=2)
+    typed, _ = eng.run(reqs)
+    api._WARNED.discard("tuple-trace")            # arm the one-shot
+    with pytest.warns(DeprecationWarning, match="repro.serve.Request"):
+        shim, _ = eng.run(tuples)
+    with warnings.catch_warnings():               # second coercion: silent
+        warnings.simplefilter("error", DeprecationWarning)
+        eng.run(tuples)
+    for a, b in zip(typed, shim):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_run_rejects_garbage_trace_entries():
+    eng = _engine()
+    with pytest.raises(TypeError, match="Request"):
+        eng.run(["not a request"])
+    with pytest.raises(ValueError, match="n_steps"):
+        eng.run([Request(prompt=np.zeros(4, np.int32), n_steps=0)])
+
+
+def test_runstats_is_dict_compatible():
+    _, stats = _engine().run(_requests([(6, 3, 0)]))
+    assert stats["tokens"] == stats.tokens == 3
+    assert {"ticks", "decode_steps", "prefix_hit_rate"} <= set(stats.keys())
+    assert stats.get("not_a_field", 42) == 42
+    with pytest.raises(KeyError):
+        stats["not_a_field"]
+    assert stats.as_dict()["requests"] == 1
