@@ -25,6 +25,13 @@ Scenarios (all on the same reduced model config):
   interleaved with decode ticks) vs monolithic admission
   (``prefill_chunk=max_len``: the whole prompt in one stall).  The
   headline here is the p99 per-token gap, the stall chunking bounds.
+* **overload** — offered load past capacity: burst arrivals with
+  deadlines on a deliberately small engine (a 256-token bucket whose
+  requests outgrow one page, a pool too small for every slot's growth,
+  a bounded queue, deadline-aware shedding).  The graceful-degradation row: requests shed/preempt/time
+  out instead of queueing without bound, and the run reports the shed
+  rate (``--max-shed-rate`` gates it) plus a ``overload_p99_token``
+  trend row so p99-under-preemption rides the regression guard.
 
 All replays are timed warm (one run to populate jit caches, then the
 timed pass).  Reported per engine: tokens/s over *requested* tokens,
@@ -57,6 +64,11 @@ MAX_BATCH = 8
 # are MXU-aligned (128 rows), so sharing starts at prompts > 128 tokens
 SP_MAX_LEN = 384
 SP_PREFIX = 256
+
+# overload scenario bucket: big enough that requests cross a page (the
+# page is MXU-pinned at 128 rows, so growth needs max_len > 128) while
+# the pool stays smaller than max_batch * 2 pages
+OV_MAX_LEN = 256
 
 # the generators themselves live in the repro.serve.traces registry —
 # the fleet planner replays the same mixes the bench measures
@@ -116,6 +128,13 @@ def run_continuous(cfg, params, trace, *, max_len=MAX_LEN,
         "prefix_blocks_reused": stats["prefix_blocks_reused"],
     }
     out.update(_latency_stats(results, t0))
+    # graceful-degradation accounting (zeros on uncontended scenarios)
+    out["completed"] = stats["completed"]
+    out["shed"] = stats["shed"]
+    out["timeouts"] = stats["timeouts"]
+    out["preemptions"] = stats["preemptions"]
+    out["shed_rate"] = round((stats["shed"] + stats["timeouts"])
+                             / max(1, stats["requests"]), 4)
     return out
 
 
@@ -180,6 +199,9 @@ def main() -> int:
                     help="fail unless prefix caching beats the no-sharing "
                          "engine on shared-prefix per-token latency by "
                          "this factor")
+    ap.add_argument("--max-shed-rate", type=float, default=None,
+                    help="fail if the overload scenario sheds/times out "
+                         "more than this fraction of requests")
     args = ap.parse_args()
 
     import jax
@@ -218,22 +240,43 @@ def main() -> int:
                              max_batch=4, page=128,
                              prefill_chunk=SP_MAX_LEN)
 
+    # overload: bursts past capacity on a deliberately degraded engine —
+    # a 256-token bucket whose requests grow past one 128-row page, on a
+    # pool smaller than every slot's worst case (organic preemption),
+    # with a bounded queue and deadline-aware shedding of doomed work
+    from repro.serve import DeadlineAwareShed
+    n_over = max(12, n_requests)
+    over_trace = get_trace("overload")(n_over, cfg.vocab_size,
+                                       seed=args.seed, max_len=OV_MAX_LEN)
+    overload = run_continuous(cfg, params, over_trace, max_len=OV_MAX_LEN,
+                              max_batch=MAX_BATCH, page=128,
+                              n_blocks=MAX_BATCH + 2,
+                              max_queue=MAX_BATCH,
+                              admission=DeadlineAwareShed(slack=2))
+
     rows = []
     for name, r in (("sync", sync), ("continuous", cont),
                     ("shared_prefix_cached", sp_cached),
                     ("shared_prefix_nocache", sp_nocache),
                     ("longprompt_chunked", lp_chunked),
-                    ("longprompt_monolithic", lp_mono)):
+                    ("longprompt_monolithic", lp_mono),
+                    ("overload", overload)):
         us = 1e6 * r["wall_s"] / r["tokens"]
         rows.append({"name": f"{name}_us_per_token",
                      "us_per_call": round(us, 3), "derived": r})
+    # p99 under preemption as its own trend row: the regression guard
+    # compares us_per_call, so tail degradation can't hide behind a
+    # healthy mean when the scheduler is churning victims
+    rows.append({"name": "overload_p99_token",
+                 "us_per_call": round(overload["p99_token_ms"] * 1e3, 3)})
     payload = {
-        "schema": "bench_serve/v2",
+        "schema": "bench_serve/v3",
         "python": platform.python_version(),
         "config": {"arch": cfg.name, "max_len": MAX_LEN,
                    "max_batch": MAX_BATCH, "requests": n_requests,
                    "sp_max_len": SP_MAX_LEN, "sp_prefix": SP_PREFIX,
                    "shared_requests": n_shared, "long_requests": n_long,
+                   "overload_requests": n_over, "ov_max_len": OV_MAX_LEN,
                    "small": args.small, "seed": args.seed},
         "results": {"serve": rows},
     }
@@ -265,6 +308,12 @@ def main() -> int:
           f"p99 {lp_mono['p99_token_ms']:.2f}ms  "
           f"ttft p99 {lp_mono['ttft_p99_ms']:.2f}ms  "
           f"({lp_mono['prefill_chunks']} chunks)")
+    print(f"[serve_bench] overload             : "
+          f"p99 {overload['p99_token_ms']:.2f}ms  "
+          f"shed rate {overload['shed_rate']:.0%}  "
+          f"({overload['completed']}/{n_over} completed, "
+          f"{overload['shed']} shed, {overload['timeouts']} timed out, "
+          f"{overload['preemptions']} preemptions)")
 
     rc = 0
     if args.min_speedup is not None and speedup < args.min_speedup:
@@ -281,6 +330,12 @@ def main() -> int:
             and sp_speedup < args.min_prefix_speedup):
         print(f"[serve_bench] FAIL: prefix-cache speedup {sp_speedup:.2f}x "
               f"< required {args.min_prefix_speedup:.2f}x")
+        rc = 1
+    if (args.max_shed_rate is not None
+            and overload["shed_rate"] > args.max_shed_rate):
+        print(f"[serve_bench] FAIL: overload shed rate "
+              f"{overload['shed_rate']:.2f} > allowed "
+              f"{args.max_shed_rate:.2f}")
         rc = 1
     if args.check_against:
         from benchmarks.perf_smoke import check_against

@@ -8,5 +8,11 @@ from repro.serve.engine import ServeEngine, GenerateResult  # noqa: F401
 from repro.serve.paged_cache import (PagedKVCache,  # noqa: F401
                                      default_page_size, prefix_digests)
 from repro.serve.paged_engine import PagedServeEngine  # noqa: F401
+from repro.serve.resilience import (CANCELLED, OK, PREEMPTED,  # noqa: F401
+                                    SHED, STATUSES, TIMEOUT,
+                                    AdmissionPolicy, DeadlineAwareShed,
+                                    Fault, FaultPlan, FIFOPolicy,
+                                    QueueCapPolicy, QueueEntry,
+                                    min_service_ticks)
 from repro.serve.traces import (get_trace, list_traces,  # noqa: F401
                                 register_trace)

@@ -28,8 +28,8 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import (Any, Dict, Iterator, List, Protocol, Sequence, Tuple,
-                    Union, runtime_checkable)
+from typing import (Any, Dict, Iterator, List, Optional, Protocol, Sequence,
+                    Tuple, Union, runtime_checkable)
 
 import numpy as np
 
@@ -40,11 +40,20 @@ __all__ = ["Request", "RequestResult", "RunStats", "ServeAPI",
 @dataclasses.dataclass
 class Request:
     """One serve request: ``prompt`` (1-D int32 tokens), ``n_steps``
-    tokens to generate, ``arrival`` tick at which it may be admitted."""
+    tokens to generate, ``arrival`` tick at which it may be admitted.
+
+    ``deadline`` is the absolute tick the request must have *finished*
+    by — crossing it retires the request with status ``TIMEOUT``
+    (partial tokens kept).  ``cancel_at`` is the tick the client gives
+    up, queued or in-flight, retiring with ``CANCELLED``.  Both are
+    optional; ``None`` means the pre-resilience wait-forever behavior.
+    """
 
     prompt: np.ndarray
     n_steps: int
     arrival: int = 0
+    deadline: Optional[int] = None
+    cancel_at: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -52,11 +61,14 @@ class RequestResult:
     tokens: np.ndarray              # (n_steps,) generated tokens
     prompt_len: int
     arrival: int                    # tick the request became eligible
-    admitted: int                   # tick it was admitted
+    admitted: int                   # tick it was admitted (-1: never)
     finished: int                   # tick its last token was emitted
     emit_times: List[float]         # perf_counter() per emitted token
     admit_time: float = 0.0         # perf_counter() at admission (TTFT base)
     prefix_blocks: int = 0          # pages taken from the prefix cache
+    status: str = "OK"              # terminal state (repro.serve.resilience)
+    detail: str = ""                # human-readable reason for non-OK ends
+    preemptions: int = 0            # times this request was evicted/requeued
 
 
 @dataclasses.dataclass
@@ -81,6 +93,13 @@ class RunStats:
     prefix_hit_rate: float = 0.0
     occupancy_mean: float = 0.0
     occupancy_max: float = 0.0
+    # -- graceful-degradation accounting (repro.serve.resilience) ----------
+    completed: int = 0              # requests that ended with status OK
+    shed: int = 0                   # rejected by admission control
+    timeouts: int = 0               # deadline crossed before completion
+    cancelled: int = 0              # client cancel_at reached
+    preemptions: int = 0            # evictions (incl. re-queues that ran OK)
+    stalled_ticks: int = 0          # data-plane ticks lost to stall faults
 
     # -- dict compatibility -------------------------------------------------
 
@@ -145,6 +164,10 @@ def as_requests(trace: Sequence[Union[Request, Tuple]]) -> List[Request]:
         r.prompt = np.asarray(r.prompt, np.int32).reshape(-1)
         r.n_steps = int(r.n_steps)
         r.arrival = int(r.arrival)
+        if r.deadline is not None:
+            r.deadline = int(r.deadline)
+        if r.cancel_at is not None:
+            r.cancel_at = int(r.cancel_at)
         if r.n_steps < 1:
             raise ValueError(f"request {i}: n_steps={r.n_steps} < 1")
         reqs.append(r)

@@ -284,6 +284,79 @@ class PagedKVCache:
             self._index[d] = b
             self._digest[b] = d
 
+    def check_invariants(self) -> None:
+        """Assert the allocator's conservation and bookkeeping invariants.
+
+        The chaos suite calls this after **every scheduler tick** under
+        fault injection; any violation raises :class:`AssertionError`
+        naming the broken invariant.  The contract:
+
+        * **conservation** — every allocatable block is in exactly one
+          of three states: *fresh* (never-registered free list), *parked*
+          (refcount 0 but still in the prefix index), or *live*
+          (refcount > 0): ``fresh + parked + live == n_blocks - 1`` with
+          the three sets disjoint — no leaked and no double-owned block;
+        * the **null block** (0) is never fresh, parked, live, or
+          indexed;
+        * refcounts are non-negative; parked blocks sit at exactly 0;
+        * the **prefix index** is an exact bijection with the reverse
+          map and only names live or parked blocks (an indexed fresh
+          block would serve stale K/V to a future prefix match).
+        """
+        P = self.n_blocks
+        fresh = list(self._fresh)
+        fresh_set = set(fresh)
+        parked = set(self._parked)
+        if len(fresh) != len(fresh_set):
+            raise AssertionError(f"fresh list holds duplicates: {fresh}")
+        for name, ids in (("fresh", fresh_set), ("parked", parked)):
+            bad = [b for b in ids if not 1 <= b < P]
+            if bad:
+                raise AssertionError(f"{name} holds out-of-range or null "
+                                     f"blocks: {bad}")
+        neg = [b for b in range(P) if self._refs[b] < 0]
+        if neg:
+            raise AssertionError(f"negative refcounts on blocks {neg}")
+        if self._refs[0] != 0:
+            raise AssertionError(f"null block has refcount {self._refs[0]}")
+        live = {b for b in range(1, P) if self._refs[b] > 0}
+        if fresh_set & parked:
+            raise AssertionError("blocks both fresh and parked: "
+                                 f"{sorted(fresh_set & parked)}")
+        if live & fresh_set:
+            raise AssertionError("live blocks on the fresh list: "
+                                 f"{sorted(live & fresh_set)}")
+        if live & parked:
+            raise AssertionError("live blocks parked: "
+                                 f"{sorted(live & parked)}")
+        if len(fresh_set) + len(parked) + len(live) != P - 1:
+            missing = (set(range(1, P)) - fresh_set - parked - live)
+            raise AssertionError(
+                f"block conservation broken: fresh {len(fresh_set)} + "
+                f"parked {len(parked)} + live {len(live)} != {P - 1} "
+                f"(leaked blocks: {sorted(missing)})")
+        bad_parked = [b for b in parked if self._refs[b] != 0]
+        if bad_parked:
+            raise AssertionError(f"parked blocks with nonzero refcount: "
+                                 f"{bad_parked}")
+        unindexed = [b for b in parked if b not in self._digest]
+        if unindexed:
+            raise AssertionError(f"parked blocks missing from the prefix "
+                                 f"index: {unindexed}")
+        if len(self._index) != len(self._digest):
+            raise AssertionError(
+                f"prefix index ({len(self._index)}) and reverse map "
+                f"({len(self._digest)}) disagree")
+        for d, b in self._index.items():
+            if self._digest.get(b) != d:
+                raise AssertionError(
+                    f"prefix index names block {b} but the reverse map "
+                    f"holds {self._digest.get(b)!r} != {d!r}")
+            if b not in live and b not in parked:
+                raise AssertionError(
+                    f"prefix index names block {b}, which is neither "
+                    "live nor parked (stale K/V would be served)")
+
     def fork(self, b: int) -> int:
         """Copy-on-write: give the caller a private copy of shared block
         ``b``, moving one of its references onto the copy.  Returns the

@@ -28,7 +28,8 @@ import numpy as np
 from repro.serve.api import Request
 
 __all__ = ["register_trace", "get_trace", "list_traces",
-           "make_trace", "make_shared_trace", "make_longprompt_trace"]
+           "make_trace", "make_shared_trace", "make_longprompt_trace",
+           "make_overload_trace"]
 
 # defaults shared with benchmarks/serve_bench.py: requests are clamped
 # to a 128-token engine bucket; the shared-prefix recipe fixes a
@@ -99,6 +100,41 @@ def make_shared_trace(n_requests: int, vocab: int, seed: int = 0,
         n = int(rng.integers(6, 20))
         reqs.append(Request(prompt=np.concatenate([prefix, tail]),
                             n_steps=n, arrival=tick))
+    return reqs
+
+
+@register_trace("overload")
+def make_overload_trace(n_requests: int, vocab: int, seed: int = 0,
+                        max_len: int = TRACE_MAX_LEN,
+                        burst: int = 6,
+                        deadline_frac: float = 0.5) -> List[Request]:
+    """Offered load past capacity: requests arrive in bursts of
+    ``burst`` per gap (far faster than a small engine drains them), and
+    ``deadline_frac`` of them carry a deadline a few times their own
+    service time — tight enough that sustained queueing blows it.  The
+    graceful-degradation scenario: without shedding the queue and TTFT
+    grow without bound; with a ``max_queue`` bound plus a deadline-aware
+    policy the engine sheds doomed work and keeps the rest inside SLO."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    tick = 0
+    for i in range(n_requests):
+        if i % burst == 0 and i:
+            tick += int(rng.poisson(2))             # bursts, not a stream
+        # draws scale with max_len so a 256-token bucket gets multi-page
+        # requests (sequence growth past a 128-row page is what makes
+        # pool exhaustion — and therefore preemption — reachable)
+        s = int(rng.integers(6, max(7, min(120, max_len - 40))))
+        n = int(rng.integers(8, 64))
+        n = min(n, max_len - s)
+        deadline = None
+        if rng.random() < deadline_frac:
+            # ~3-5x the request's own ticks of work: generous alone,
+            # hopeless behind a deep queue
+            deadline = tick + int((s // 32 + n) * rng.uniform(3.0, 5.0))
+        prompt = rng.integers(0, vocab, (s,)).astype(np.int32)
+        reqs.append(Request(prompt=prompt, n_steps=n, arrival=tick,
+                            deadline=deadline))
     return reqs
 
 
